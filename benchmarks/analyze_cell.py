@@ -1,0 +1,92 @@
+"""Forensics for one dry-run cell: top collectives and byte contributors
+with shapes + loop multipliers - the 'profile' of the dry-run methodology.
+
+  PYTHONPATH=src python -m benchmarks.analyze_cell --arch X --shape Y [opts]
+"""
+from repro.launch import dryrun  # noqa: F401  (sets XLA_FLAGS=512 first)
+
+import argparse
+from collections import defaultdict
+
+import jax
+
+from repro.configs import SHAPES, get_config
+from repro.core import hlo_costs, steps as steps_lib
+from repro.launch.mesh import make_production_mesh, mesh_devices
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--strategy", default="phylanx")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--moe-dispatch", default="")
+    ap.add_argument("--override", action="append", default=[])
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--dump", default="")
+    args = ap.parse_args()
+
+    import dataclasses
+    cfg = get_config(args.arch)
+    if args.moe_dispatch:
+        cfg = dataclasses.replace(cfg, moe_dispatch=args.moe_dispatch)
+    for ov in args.override:
+        k, v = ov.split("=")
+        cur = getattr(cfg, k)
+        cfg = dataclasses.replace(
+            cfg, **{k: type(cur)(v) if cur is not None else v})
+    mesh = make_production_mesh()
+    n_dev = mesh_devices(mesh)
+    strategy = steps_lib.Strategy(name=args.strategy,
+                                  sequence_parallel=args.seq_parallel)
+    step, lowered, compiled, tl, tc = dryrun.lower_cell(
+        cfg, mesh, args.shape, strategy)
+    txt = compiled.as_text()
+    if args.dump:
+        open(args.dump, "w").write(txt)
+        print(f"dumped HLO to {args.dump}")
+
+    comps, entry = hlo_costs.parse_module(txt)
+    mult, fusion_comps = hlo_costs._multipliers(comps, entry)
+
+    colls, bytes_rows = [], []
+    for cname, instrs in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        table = {i.name: i.shape_str for i in instrs}
+        in_fusion = cname in fusion_comps
+        for ins in instrs:
+            op = ins.opcode.removesuffix("-start")
+            if op in ("all-reduce", "all-gather", "reduce-scatter",
+                      "all-to-all", "collective-permute"):
+                s = ins.result_bytes()
+                g = hlo_costs._group_size(ins.attrs, n_dev)
+                if s and g > 1:
+                    w = {"all-reduce": 2 * s * (g - 1) / g,
+                         "all-gather": s * (g - 1) / g,
+                         "reduce-scatter": s * (g - 1),
+                         "all-to-all": s * (g - 1) / g,
+                         "collective-permute": s}[op]
+                    colls.append((m * w, m, op, g, ins.shape_str[:70],
+                                  cname[:34]))
+            if not in_fusion and ins.opcode not in hlo_costs._SKIP_BYTES \
+                    and not ins.opcode.endswith("-done"):
+                b = hlo_costs._instr_bytes(ins, table, comps)
+                bytes_rows.append((m * b, m, ins.opcode,
+                                   ins.shape_str[:60], cname[:34]))
+
+    print(f"\n=== top collectives by wire bytes "
+          f"(total {sum(c[0] for c in colls) / 1e9:.2f} GB/dev) ===")
+    for w, m, op, g, shape, comp in sorted(colls, reverse=True)[:args.top]:
+        print(f"{w / 1e9:9.3f}GB x{m:6.0f} g={g:4d} {op:18s} {shape}  [{comp}]")
+
+    print(f"\n=== top HBM-byte contributors "
+          f"(total {sum(b[0] for b in bytes_rows) / 1e12:.2f} TB/dev) ===")
+    for b, m, op, shape, comp in sorted(bytes_rows, reverse=True)[:args.top]:
+        print(f"{b / 1e9:9.2f}GB x{m:6.0f} {op:26s} {shape}  [{comp}]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Regenerate the tables embedded in EXPERIMENTS.md from artifacts.
+
+  PYTHONPATH=src python -m benchmarks.finalize_experiments
+"""
+import glob
+import io
+import json
+import os
+import re
+import sys
+from contextlib import redirect_stdout
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def opt_table() -> str:
+    rows = ["| arch | shape | baseline bound (s) | opt bound (s) | gain | "
+            "baseline dom | opt dom |",
+            "|---|---|---|---|---|---|---|"]
+    for f in sorted(glob.glob(os.path.join(
+            ROOT, "artifacts/dryrun/single/*__opt.json"))):
+        o = json.load(open(f))
+        if o.get("status") != "ok":
+            continue
+        base_f = f.replace("__opt.json", ".json")
+        if not os.path.exists(base_f):
+            continue
+        b = json.load(open(base_f))
+        if b.get("status") != "ok":
+            continue
+        br, orr = b["roofline"], o["roofline"]
+        gain = br["bound_step_s"] / orr["bound_step_s"]
+        rows.append(f"| {o['arch']} | {o['shape']} "
+                    f"| {br['bound_step_s']:.3e} | {orr['bound_step_s']:.3e} "
+                    f"| {gain:.2f}x | {br['dominant']} | {orr['dominant']} |")
+    return "\n".join(rows)
+
+
+def main():
+    from . import roofline
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        roofline.main(emit_csv=True)
+    table = open(os.path.join(ROOT, "artifacts/roofline.md")).read()
+
+    exp_path = os.path.join(ROOT, "EXPERIMENTS.md")
+    text = open(exp_path).read()
+    text = re.sub(
+        r"<!-- ROOFLINE_TABLE -->.*?(?=\n\nReading of the baseline table)",
+        "<!-- ROOFLINE_TABLE -->\n\n" + table, text, flags=re.S)
+    ot = opt_table()
+    text = re.sub(r"<!-- OPT_TABLE -->.*?(?=\n\n## Reproduction commands)",
+                  "<!-- OPT_TABLE -->\n\n" + ot, text, flags=re.S)
+    open(exp_path, "w").write(text)
+    print("EXPERIMENTS.md tables regenerated "
+          f"({table.count(chr(10))} roofline rows, {ot.count(chr(10)) - 1} opt rows)")
+
+
+if __name__ == "__main__":
+    main()

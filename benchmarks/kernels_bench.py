@@ -1,0 +1,56 @@
+"""Pallas kernel micro-benchmarks vs jnp oracles.
+
+On CPU the kernels run in interpret mode (Python evaluation), so wall time
+is NOT meaningful for the kernel path - the honest derived metric here is
+oracle wall time plus the kernel's modelled VMEM working set / arithmetic
+intensity, which is what the TPU roofline cares about.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import emit, timeit
+
+
+def main():
+    from repro.kernels import ref
+    # flash attention oracle timings + kernel tile model
+    for (B, H, Hkv, S, d) in [(1, 8, 2, 1024, 128), (1, 16, 8, 2048, 64)]:
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (B, H, S, d), jnp.bfloat16)
+        k = jax.random.normal(ks[1], (B, Hkv, S, d), jnp.bfloat16)
+        v = jax.random.normal(ks[2], (B, Hkv, S, d), jnp.bfloat16)
+        f = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
+        dt = timeit(f, q, k, v)
+        bq, bk = 128, 128
+        vmem = (bq * d + 2 * bk * d + bq * bk) * 4
+        flops = 4 * B * H * S * S * d / 2  # causal triangle
+        emit(f"kernel_flash_oracle_B{B}H{H}S{S}d{d}", dt * 1e6,
+             f"tile_vmem_bytes={vmem};causal_tflops={flops / 1e12:.3f}")
+
+    # mamba2 chunk scan
+    for (B, H, L, P, N, c) in [(1, 8, 2048, 64, 64, 128)]:
+        ks = jax.random.split(jax.random.PRNGKey(1), 4)
+        xdt = jax.random.normal(ks[0], (B, H, L, P)) * 0.5
+        a = -jnp.abs(jax.random.normal(ks[1], (B, H, L))) * 0.1
+        Bm = jax.random.normal(ks[2], (B, H, L, N)) * 0.5
+        Cm = jax.random.normal(ks[3], (B, H, L, N)) * 0.5
+        f = jax.jit(lambda *t: ref.mamba2_scan_ref(*t)[0])
+        dt = timeit(f, xdt, a, Bm, Cm)
+        vmem = (3 * c * N + 2 * c * P + c * c + P * N) * 4
+        emit(f"kernel_mamba2_oracle_L{L}P{P}N{N}", dt * 1e6,
+             f"chunk={c};tile_vmem_bytes={vmem}")
+
+    # onebit pack/unpack
+    g = jax.random.normal(jax.random.PRNGKey(2), (4096, 1024))
+    e = jnp.zeros_like(g)
+    f = jax.jit(lambda g, e: ref.onebit_quantize_ref(g, e)[2])
+    dt = timeit(f, g, e)
+    ratio = g.size * 4 / (g.size // 32 * 4 + g.shape[0] * 4)
+    emit("kernel_onebit_oracle_4Mx", dt * 1e6,
+         f"wire_compression={ratio:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""§Perf hillclimb driver: run tagged dry-run variants for the three chosen
+cells and print before/after roofline terms.
+
+Cells (chosen per the spec's three criteria):
+  A. chameleon-34b x train_4k   - most representative of the paper's
+     technique (DP+TP training of the largest model); baseline does not fit
+     HBM.
+  B. granite-moe-1b x decode_32k - the most collective-bound cell.
+  C. xlstm-350m x train_4k       - worst train-shape roofline fraction.
+
+Each variant is one hypothesis->change->measure iteration; EXPERIMENTS.md
+§Perf narrates them with the numbers this script records.
+
+  PYTHONPATH=src python -m benchmarks.perf_iterations [--mesh single]
+"""
+from repro.launch import dryrun  # noqa: F401  (sets XLA_FLAGS=512 first)
+
+import argparse
+import json
+from pathlib import Path
+
+RUNS = [
+    # (arch, shape, kwargs, tag)
+    ("chameleon-34b", "train_4k", {}, ""),  # baseline (cached)
+    ("chameleon-34b", "train_4k", {"strategy_name": "zero1"}, "zero1"),
+    ("chameleon-34b", "train_4k", {"seq_parallel": True}, "sp"),
+    ("chameleon-34b", "train_4k",
+     {"strategy_name": "zero1", "seq_parallel": True}, "zero1_sp"),
+    ("granite-moe-1b-a400m", "decode_32k", {}, ""),
+    ("granite-moe-1b-a400m", "decode_32k", {"moe_dispatch": "sort"},
+     "sortdisp"),
+    ("granite-moe-1b-a400m", "decode_32k",
+     {"overrides": {"cache_update": "masked"}}, "maskedcache"),
+    ("granite-moe-1b-a400m", "decode_32k",
+     {"moe_dispatch": "sort", "overrides": {"cache_update": "masked"}},
+     "sort_masked"),
+    ("xlstm-350m", "train_4k", {}, ""),
+    ("xlstm-350m", "train_4k", {"overrides": {"ssm_chunk": 512}}, "chunk512"),
+    ("xlstm-350m", "train_4k", {"overrides": {"ssm_chunk": 128}}, "chunk128"),
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    out = Path(args.out)
+    print(f"{'cell':44s} {'tag':12s} {'tc':>10s} {'tm':>10s} {'tx':>10s} "
+          f"{'dom':>10s} {'peakGB':>7s} {'fit':>5s}")
+    for arch, shape, kw, tag in RUNS:
+        rec = dryrun.run_cell(arch, shape, args.mesh,
+                              kw.get("strategy_name", "phylanx"), out,
+                              tag=tag, force=args.force and bool(tag),
+                              seq_parallel=kw.get("seq_parallel", False),
+                              moe_dispatch=kw.get("moe_dispatch", ""),
+                              overrides=kw.get("overrides"))
+        if rec["status"] != "ok":
+            print(f"{arch + 'x' + shape:44s} {tag or 'BASE':12s} "
+                  f"{rec['status']}: {rec.get('error', '')[:80]}")
+            continue
+        rr = rec["roofline"]
+        print(f"{arch + ' x ' + shape:44s} {tag or 'BASE':12s} "
+              f"{rr['t_compute_s']:10.3e} {rr['t_memory_s']:10.3e} "
+              f"{rr['t_collective_s']:10.3e} {rr['dominant']:>10s} "
+              f"{rec['memory'].get('peak_bytes_est', 0) / 1e9:7.1f} "
+              f"{str(rec['fits_hbm']):>5s}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

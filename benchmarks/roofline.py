@@ -1,0 +1,80 @@
+"""Roofline aggregation (deliverable g): read every dry-run artifact and
+emit the per-(arch x shape x mesh) three-term table + dominant bottleneck.
+
+Also writes artifacts/roofline.csv and artifacts/roofline.md (the table
+embedded in EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+OUT = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+
+def load(mesh: str, tag: str = ""):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(ART, mesh, "*.json"))):
+        r = json.load(open(f))
+        if r.get("tag", "") != tag:
+            continue
+        rows.append(r)
+    return rows
+
+
+def fix_note(r) -> str:
+    rr = r["roofline"]
+    dom = rr["dominant"]
+    if dom == "memory":
+        return ("shard activation checkpoints (SP) / raise arithmetic "
+                "intensity (fused kernels)")
+    if dom == "collective":
+        return "fewer/larger collectives: SP reduce-scatter, EP all-to-all layout"
+    return "compute-bound: increase per-chip batch or accept"
+
+
+def main(emit_csv: bool = True):
+    md = ["| arch | shape | mesh | t_comp (s) | t_mem (s) | t_coll (s) | "
+          "dominant | 6ND/HLO | roofline frac | fits |",
+          "|---|---|---|---|---|---|---|---|---|---|"]
+    csv_rows = ["arch,shape,mesh,t_compute_s,t_memory_s,t_collective_s,"
+                "dominant,useful_flops_ratio,roofline_fraction,fits_hbm"]
+    for mesh in ("single", "multipod"):
+        for r in load(mesh):
+            if r["status"] == "skipped":
+                md.append(f"| {r['arch']} | {r['shape']} | {mesh} | - | - |"
+                          f" - | skipped | - | - | - |")
+                continue
+            if r["status"] != "ok":
+                continue
+            rr = r["roofline"]
+            name = f"roofline_{mesh}_{r['arch']}_{r['shape']}"
+            emit(name, rr["bound_step_s"] * 1e6,
+                 f"dom={rr['dominant']};frac={rr['roofline_fraction']:.3f};"
+                 f"fits={r['fits_hbm']}")
+            md.append(
+                f"| {r['arch']} | {r['shape']} | {mesh} "
+                f"| {rr['t_compute_s']:.3e} | {rr['t_memory_s']:.3e} "
+                f"| {rr['t_collective_s']:.3e} | {rr['dominant']} "
+                f"| {rr['useful_flops_ratio']:.2f} "
+                f"| {rr['roofline_fraction'] * 100:.1f}% "
+                f"| {'Y' if r['fits_hbm'] else 'N'} |")
+            csv_rows.append(
+                f"{r['arch']},{r['shape']},{mesh},{rr['t_compute_s']:.6e},"
+                f"{rr['t_memory_s']:.6e},{rr['t_collective_s']:.6e},"
+                f"{rr['dominant']},{rr['useful_flops_ratio']:.4f},"
+                f"{rr['roofline_fraction']:.4f},{r['fits_hbm']}")
+    if emit_csv:
+        os.makedirs(OUT, exist_ok=True)
+        with open(os.path.join(OUT, "roofline.md"), "w") as f:
+            f.write("\n".join(md) + "\n")
+        with open(os.path.join(OUT, "roofline.csv"), "w") as f:
+            f.write("\n".join(csv_rows) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Benchmark harness entry point (deliverable d).
+
+One section per paper table/figure, printing ``name,us_per_call,derived``
+CSV lines:
+  * fig1_*    - Figure 1 (Phylanx vs Horovod, 4-layer HAR CNN): measured on
+                1..8 local devices + alpha-beta projection to 128 nodes
+  * table1_*  - Table 1 as measured strategy/feature matrix
+  * kernel_*  - Pallas kernel oracles + tile models
+  * roofline_* - per (arch x shape x mesh) dry-run roofline terms
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only fig1|table1|kernels|roofline]
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    sections = []
+    if not args.only or args.only == "fig1":
+        from . import fig1_scaling
+        sections.append(("fig1", fig1_scaling.main))
+    if not args.only or args.only == "table1":
+        from . import table1_features
+        sections.append(("table1", table1_features.main))
+    if not args.only or args.only == "kernels":
+        from . import kernels_bench
+        sections.append(("kernels", kernels_bench.main))
+    if not args.only or args.only == "roofline":
+        from . import roofline
+        sections.append(("roofline", roofline.main))
+    failed = []
+    for name, fn in sections:
+        try:
+            fn()
+        except Exception as e:  # keep the harness going; report at the end
+            traceback.print_exc()
+            failed.append((name, str(e)))
+    if failed:
+        print(f"FAILED sections: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

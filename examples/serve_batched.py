@@ -1,0 +1,23 @@
+"""Batched serving with continuous slot refill on a (data=2, model=2) mesh.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import sys  # noqa: E402
+
+from repro.launch import serve as serve_mod  # noqa: E402
+
+
+def main():
+    args = serve_mod.parser().parse_args(
+        ["--arch", "qwen3-4b", "--requests", "12", "--slots", "4",
+         "--prompt-len", "32", "--gen-len", "16", "--data", "2",
+         "--model", "2"] + sys.argv[1:])
+    serve_mod.run(args)
+
+
+if __name__ == "__main__":
+    main()

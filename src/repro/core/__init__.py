@@ -1,0 +1,14 @@
+"""phyrax core: the paper's infrastructure contribution, composable.
+
+Modules:
+  sharding     - divisibility-aware tiling plans (logical dims -> mesh axes)
+  dist_array   - tiled arrays with whole-array metadata + overlapped tiling
+  collectives  - named async collectives, ring schedules, halo exchange
+  fusion       - tensor fusion (capped collective buckets)
+  granularity  - runtime-adaptive grain-size policy
+  futures      - host-side futurized execution / in-flight step pipeline
+  resilience   - replay / replicate+consensus / checksums
+  overlap      - communication/computation overlap strategies (DP schedules)
+  steps        - train/prefill/decode step builders
+"""
+from . import sharding, fusion, collectives, granularity, futures, resilience  # noqa: F401

@@ -1,0 +1,137 @@
+"""Tensor fusion: coalesce small tensors into capped buckets (paper R5).
+
+Phylanx "runtime-adaptively coalesces messages into larger units (tensor
+fusion) ... which further reduces the latencies and overheads caused by the
+necessary communication operations".  The same trick appears as gradient
+bucketing in PyTorch-DDP and tensor fusion in Horovod; the paper's point is
+that it must be *integrated* into the framework (unified, R6) rather than
+bolted on through proxies.
+
+Here the fusion plan is a pure-JAX transformation: a pytree of tensors is
+flattened into a small number of 1-D buffers, each at most ``cap_bytes``
+large and dtype-homogeneous, so one collective per buffer replaces one
+collective per tensor.  Pack/unpack are reshape/concat/slice only, so they
+fuse into the surrounding XLA program and cost ~no extra HBM traffic beyond
+the copy into the fused buffer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class _Entry:
+    index: int                 # position in flattened tree
+    shape: tuple[int, ...]
+    size: int
+    offset: int                # offset inside its bucket
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    dtype: Any
+    entries: tuple[_Entry, ...]
+    total: int                 # elements (unpadded)
+    padded: int = 0            # elements incl. shard-divisibility padding
+
+    @property
+    def nbytes(self) -> int:
+        return max(self.total, self.padded) * jnp.dtype(self.dtype).itemsize
+
+    @property
+    def size(self) -> int:
+        return max(self.total, self.padded)
+
+
+@dataclasses.dataclass(frozen=True)
+class FusionPlan:
+    treedef: Any
+    buckets: tuple[Bucket, ...]
+    n_leaves: int
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.buckets)
+
+
+def make_plan(tree, cap_bytes: int = 32 * 1024 * 1024,
+              pad_to: int = 1) -> FusionPlan:
+    """Greedy first-fit bucketing in flatten order, per dtype.
+
+    Keeping flatten order (rather than size-sorting) preserves the backward-
+    pass readiness order: gradients produced late in the backward (early
+    layers) land in late buckets, so each bucket's collective can launch as
+    soon as its last member is produced - the overlap property PyTorch-DDP
+    relies on and the paper's async-collective requirement (R3).
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    open_buckets: dict[Any, list] = {}     # dtype -> [entries, total]
+    done: list[Bucket] = []
+
+    def _close(dt):
+        entries, total = open_buckets.pop(dt)
+        padded = ((total + pad_to - 1) // pad_to) * pad_to
+        done.append(Bucket(dt, tuple(entries), total, padded))
+
+    for i, leaf in enumerate(leaves):
+        dt = jnp.dtype(leaf.dtype)
+        size = int(np.prod(leaf.shape)) if leaf.shape else 1
+        item = dt.itemsize
+        if dt in open_buckets and (open_buckets[dt][1] + size) * item > cap_bytes:
+            _close(dt)
+        if dt not in open_buckets:
+            open_buckets[dt] = [[], 0]
+        entries, total = open_buckets[dt]
+        entries.append(_Entry(i, tuple(leaf.shape), size, total))
+        open_buckets[dt][1] = total + size
+    for dt in list(open_buckets):
+        _close(dt)
+    return FusionPlan(treedef=treedef, buckets=tuple(done), n_leaves=len(leaves))
+
+
+def pack(tree, plan: FusionPlan) -> list[jax.Array]:
+    """Pytree -> list of fused 1-D buffers (one per bucket)."""
+    leaves = jax.tree.leaves(tree)
+    assert len(leaves) == plan.n_leaves
+    out = []
+    for b in plan.buckets:
+        parts = [jnp.ravel(leaves[e.index]).astype(b.dtype) for e in b.entries]
+        if b.padded > b.total:
+            parts.append(jnp.zeros((b.padded - b.total,), b.dtype))
+        out.append(jnp.concatenate(parts) if len(parts) > 1 else parts[0])
+    return out
+
+
+def unpack(buffers: Sequence[jax.Array], plan: FusionPlan):
+    """List of fused buffers -> pytree with original shapes."""
+    assert len(buffers) == plan.n_buckets
+    leaves: list = [None] * plan.n_leaves
+    for buf, b in zip(buffers, plan.buckets):
+        for e in b.entries:
+            leaves[e.index] = jax.lax.dynamic_slice_in_dim(
+                buf, e.offset, e.size).reshape(e.shape)
+    return jax.tree.unflatten(plan.treedef, leaves)
+
+
+def fused_apply(tree, fn: Callable[[jax.Array], jax.Array],
+                cap_bytes: int = 32 * 1024 * 1024):
+    """Apply ``fn`` (e.g. a collective) per fused bucket instead of per leaf."""
+    plan = make_plan(tree, cap_bytes)
+    return unpack([fn(b) for b in pack(tree, plan)], plan)
+
+
+def collective_stats(tree, cap_bytes: int) -> dict:
+    """Napkin-math readout: collectives saved by fusion (for logs/tests)."""
+    leaves = jax.tree.leaves(tree)
+    plan = make_plan(tree, cap_bytes)
+    return {
+        "tensors": len(leaves),
+        "buckets": plan.n_buckets,
+        "bytes": int(sum(b.nbytes for b in plan.buckets)),
+        "launches_saved": len(leaves) - plan.n_buckets,
+    }

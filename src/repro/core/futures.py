@@ -1,0 +1,90 @@
+"""Host-side futurized execution (paper's futurization, where dynamism lives).
+
+Phylanx turns user code into a futurized execution tree scheduled by HPX.
+Under XLA the *device* dataflow is compiled ahead of time (see DESIGN.md §2),
+but the host side of a training/serving loop retains real asynchrony: JAX
+dispatch is async, transfers/saves can proceed concurrently, and several
+steps can be kept in flight.  This module gives that a Phylanx-flavoured
+API: ``defer`` builds a DAG of host tasks whose inputs may be device arrays
+(already-async) or other futures; ``Pipeline`` keeps N steps in flight with
+donation, which is how the training loop overlaps data loading, compute and
+checkpoint I/O.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Callable, Iterable
+
+import jax
+
+
+class PhyFuture:
+    """A future over host work; device arrays pass through untouched
+    (they are already futures under JAX's async dispatch)."""
+
+    __slots__ = ("_f",)
+
+    def __init__(self, f: Future):
+        self._f = f
+
+    def result(self):
+        return self._f.result()
+
+    def done(self) -> bool:
+        return self._f.done()
+
+
+class FuturizedGraph:
+    """Tiny futurized execution tree: nodes run when dependencies resolve."""
+
+    def __init__(self, max_workers: int = 4):
+        self._pool = ThreadPoolExecutor(max_workers=max_workers)
+
+    def defer(self, fn: Callable, *args, **kwargs) -> PhyFuture:
+        def run():
+            a = [x.result() if isinstance(x, PhyFuture) else x for x in args]
+            kw = {k: (v.result() if isinstance(v, PhyFuture) else v)
+                  for k, v in kwargs.items()}
+            return fn(*a, **kw)
+        return PhyFuture(self._pool.submit(run))
+
+    def gather(self, futures: Iterable[PhyFuture]) -> list:
+        return [f.result() for f in futures]
+
+    def shutdown(self):
+        self._pool.shutdown(wait=True)
+
+
+@dataclasses.dataclass
+class InFlight:
+    step: int
+    outputs: Any
+
+
+class Pipeline:
+    """Keep up to ``depth`` device steps in flight (constraint-based sync:
+    block only when the pipeline is full, never earlier)."""
+
+    def __init__(self, depth: int = 2):
+        self.depth = depth
+        self._q: collections.deque[InFlight] = collections.deque()
+
+    def push(self, step: int, outputs: Any) -> InFlight | None:
+        """Register async outputs of a step; returns the retired step whose
+        results are now forced (or None while the pipeline fills)."""
+        self._q.append(InFlight(step, outputs))
+        if len(self._q) > self.depth:
+            oldest = self._q.popleft()
+            jax.block_until_ready(oldest.outputs)
+            return oldest
+        return None
+
+    def drain(self) -> list[InFlight]:
+        out = list(self._q)
+        self._q.clear()
+        for item in out:
+            jax.block_until_ready(item.outputs)
+        return out

@@ -1,0 +1,116 @@
+"""HLO-text analysis: collective inventory + wire-byte model for §Roofline.
+
+``cost_analysis()`` has no collective-byte entry, so we parse the compiled
+module text, find every collective instruction, take its payload bytes from
+the printed result shape, and convert to *wire bytes per device* with ring-
+algorithm factors over the parsed replica-group size g:
+
+  all-reduce         2 * s * (g-1) / g      (s = payload bytes)
+  all-gather         s * (g-1) / g          (s = gathered/output bytes)
+  reduce-scatter     s * (g-1) / g          (s = input bytes = out*g)
+  all-to-all         s * (g-1) / g          (s = payload bytes)
+  collective-permute s
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DT_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DT_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DT_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict                 # HLO ops (post XLA combining)
+    operands: dict               # logical launches (variadic operands)
+    payload_bytes: dict          # sum of result-shape bytes per op kind
+    wire_bytes: dict             # ring-model wire bytes per device per kind
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return float(sum(self.wire_bytes.values()))
+
+    @property
+    def total_count(self) -> int:
+        return int(sum(self.counts.values()))
+
+    def to_json(self) -> dict:
+        return {"counts": dict(self.counts),
+                "operands": dict(self.operands),
+                "payload_bytes": {k: float(v) for k, v in self.payload_bytes.items()},
+                "wire_bytes": {k: float(v) for k, v in self.wire_bytes.items()},
+                "total_wire_bytes": self.total_wire_bytes}
+
+
+def analyze_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    counts: dict = defaultdict(int)
+    operands: dict = defaultdict(int)
+    payload: dict = defaultdict(float)
+    wire: dict = defaultdict(float)
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        s = _shape_bytes(shape_str)
+        if s == 0:
+            continue
+        g = _group_size(line, n_devices)
+        if g <= 1:
+            continue
+        counts[op] += 1
+        operands[op] += max(shape_str.count("["), 1)
+        payload[op] += s
+        if op == "all-reduce":
+            w = 2 * s * (g - 1) / g
+        elif op == "all-gather":
+            w = s * (g - 1) / g
+        elif op == "reduce-scatter":
+            w = s * (g - 1)          # printed shape is the scattered output
+        elif op == "all-to-all":
+            w = s * (g - 1) / g
+        else:                         # collective-permute
+            w = s
+        wire[op] += w
+    return CollectiveStats(dict(counts), dict(operands), dict(payload), dict(wire))
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))

@@ -1,0 +1,356 @@
+"""Loop-aware HLO cost analysis.
+
+``compiled.cost_analysis()`` counts each ``while`` body ONCE - for scan-based
+models (layers scan, chunked attention, SSM chunk scans) that undercounts
+FLOPs, bytes and collectives by the trip count (verified empirically; see
+EXPERIMENTS.md §Dry-run "methodology").  This module re-derives the three
+roofline inputs from ``compiled.as_text()`` with loop multipliers:
+
+  * computations are parsed into instruction lists;
+  * every ``while`` carries ``backend_config={"known_trip_count":{"n":K}}``;
+    multipliers propagate through the call graph (while bodies x K,
+    fusions/calls/conditionals x 1);
+  * FLOPs   = sum over dot/convolution ops of 2 * |out| * contracted-size,
+    times the computation's multiplier (transcendentals/elementwise are
+    ignored: MXU work dominates - documented);
+  * bytes   = sum over control-flow computations' top-level instructions of
+    (result + operand bytes), skipping bookkeeping ops (parameter, constant,
+    tuple plumbing, bitcast) and fusion internals - i.e. fused producers
+    count once, which is closer to real HBM traffic than per-op sums;
+  * collectives = payload/wire bytes as in hlo_analysis, times multiplier.
+
+All quantities are *per device* (the compiled module is the per-partition
+SPMD program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+
+from .hlo_analysis import _DT_BYTES, _shape_bytes, _group_size
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{\s*$")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s+=\s+(.*?)\s+([\w\-]+)\(")
+_TRIP = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+_BODY = re.compile(r"body=%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_TF_COMP = re.compile(r"(?:true_computation|false_computation)=%?([\w.\-]+)")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_DIMS = re.compile(r"\w+\[([\d,]*)\]")
+_CDIMS = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "while", "conditional", "call", "after-all",
+               "partition-id", "replica-id", "iota"}
+
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "all-reduce-start", "all-gather-start",
+                "collective-permute-start"}
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape_str: str
+    opcode: str
+    operands: list
+    attrs: str
+    inner: str = ""              # raw text inside the opcode parens
+    is_root: bool = False
+
+    def result_bytes(self) -> int:
+        return _shape_bytes(self.shape_str)
+
+
+def _parse_operands_and_attrs(line: str, start: int):
+    depth = 1
+    i = start
+    while i < len(line) and depth:
+        if line[i] == "(":
+            depth += 1
+        elif line[i] == ")":
+            depth -= 1
+        i += 1
+    inner = line[start:i - 1]
+    attrs = line[i:]
+    ops = [m.group(1) for m in _OPERAND.finditer(inner)]
+    return ops, attrs, inner
+
+
+def parse_module(text: str) -> dict:
+    """-> {comp_name: [Instr]}, entry name."""
+    comps: dict[str, list[Instr]] = {}
+    entry = None
+    cur = None
+    for line in text.splitlines():
+        h = _COMP_HDR.match(line)
+        if h:
+            cur = h.group(2)
+            comps[cur] = []
+            if h.group(1):
+                entry = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        ops, attrs, inner = _parse_operands_and_attrs(line, m.end())
+        comps[cur].append(Instr(m.group(1), m.group(2), m.group(3), ops,
+                                attrs, inner,
+                                is_root=line.lstrip().startswith("ROOT ")))
+    if entry is None and comps:
+        entry = list(comps)[-1]
+    return comps, entry
+
+
+def _multipliers(comps: dict, entry: str) -> tuple[dict, set]:
+    """multiplier per computation; set of fusion-called computations."""
+    mult: dict[str, float] = defaultdict(float)
+    fusion_comps: set[str] = set()
+    mult[entry] = 1.0
+    # iterate to fixpoint over the call DAG (small graphs; few passes)
+    for _ in range(64):
+        changed = False
+        new = defaultdict(float)
+        new[entry] = 1.0
+        for cname, instrs in comps.items():
+            m = mult.get(cname, 0.0)
+            if m == 0.0:
+                continue
+            for ins in instrs:
+                if ins.opcode == "while":
+                    t = _TRIP.search(ins.attrs)
+                    trip = float(t.group(1)) if t else 1.0
+                    b = _BODY.search(ins.attrs)
+                    c = _COND.search(ins.attrs)
+                    if b:
+                        new[b.group(1)] += m * trip
+                    if c:
+                        new[c.group(1)] += m * (trip + 1)
+                elif ins.opcode in ("fusion", "call", "custom-call",
+                                    "conditional", "map", "reduce",
+                                    "reduce-window", "sort", "scatter",
+                                    "select-and-scatter", "all-reduce",
+                                    "reduce-scatter"):
+                    for cm in _CALLS.finditer(ins.attrs):
+                        new[cm.group(1)] += m
+                        if ins.opcode == "fusion":
+                            fusion_comps.add(cm.group(1))
+                    bm = _BRANCHES.search(ins.attrs)
+                    if bm:
+                        for br in _OPERAND.finditer(bm.group(1)):
+                            new[br.group(1)] += m
+                    for tf in _TF_COMP.finditer(ins.attrs):
+                        new[tf.group(1)] += m
+        if dict(new) != dict(mult):
+            mult = new
+            changed = True
+        if not changed:
+            break
+    # transitively mark fusion-called comps (their callees too)
+    frontier = set(fusion_comps)
+    while frontier:
+        nxt = set()
+        for cname in frontier:
+            for ins in comps.get(cname, []):
+                for cm in _CALLS.finditer(ins.attrs):
+                    if cm.group(1) not in fusion_comps:
+                        nxt.add(cm.group(1))
+        fusion_comps |= nxt
+        frontier = nxt
+    return dict(mult), fusion_comps
+
+
+def _dims(shape_str: str) -> list[int]:
+    m = _DIMS.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(1).split(",") if d]
+
+
+def _dot_flops(ins: Instr, table: dict) -> float:
+    out = _dims(ins.shape_str)
+    out_n = 1
+    for d in out:
+        out_n *= d
+    lhs = table.get(ins.operands[0]) if ins.operands else None
+    cd = _CDIMS.search(ins.attrs)
+    k = 1
+    if lhs and cd:
+        ldims = _dims(lhs)
+        for idx in (int(x) for x in cd.group(1).split(",") if x):
+            if idx < len(ldims):
+                k *= ldims[idx]
+    return 2.0 * out_n * k
+
+
+def _conv_flops(ins: Instr, table: dict) -> float:
+    out = _dims(ins.shape_str)
+    out_n = 1
+    for d in out:
+        out_n *= d
+    rhs = table.get(ins.operands[1]) if len(ins.operands) > 1 else None
+    k = 1
+    if rhs:
+        for d in _dims(rhs)[:-1]:   # kernel spatial dims x in_features
+            k *= d
+    return 2.0 * out_n * k
+
+
+def _ordered_params(callee: list) -> list:
+    """Parameter instructions ordered by their parameter index."""
+    ps = []
+    for i in callee:
+        if i.opcode == "parameter":
+            try:
+                idx = int(i.inner.strip())
+            except (ValueError, AttributeError):
+                idx = len(ps)
+            ps.append((idx, i))
+    return [i for _, i in sorted(ps, key=lambda t: t[0])]
+
+
+def _instr_bytes(ins: Instr, table: dict, comps: dict) -> float:
+    """HBM-traffic model for one top-level instruction.
+
+    Slice-aware: dynamic-slice reads only its window; dynamic-update-slice
+    writes only the updated region (the rest aliases in place).  Fusions
+    whose operands are only dynamically sliced inside (the scan-over-layers
+    parameter slicing pattern) count the slice, not the stacked buffer.
+    """
+    op = ins.opcode
+    if op in ("dynamic-slice", "slice", "gather"):
+        # reads only the window/rows it extracts, not the whole operand
+        return 2.0 * ins.result_bytes()
+    if op == "dynamic-update-slice":
+        upd = (_shape_bytes(table[ins.operands[1]])
+               if len(ins.operands) > 1 and ins.operands[1] in table else
+               ins.result_bytes())
+        return 3.0 * upd  # read update + read/write window
+    b = float(ins.result_bytes())
+    callee = None
+    if op == "fusion":
+        cm = _CALLS.search(ins.attrs)
+        if cm:
+            callee = comps.get(cm.group(1))
+    if callee:
+        inner_table = {i.name: i.shape_str for i in callee}
+        params = _ordered_params(callee)
+        root = next((i for i in callee if i.is_root),
+                    callee[-1] if callee else None)
+        skip_pos = -1
+        # DUS-rooted fusion: result aliases in place; count the update only
+        # and skip the aliased target operand entirely
+        if root is not None and root.opcode == "dynamic-update-slice":
+            upd = (_shape_bytes(inner_table[root.operands[1]])
+                   if len(root.operands) > 1 and root.operands[1] in inner_table
+                   else 0)
+            b = 3.0 * upd
+            target = root.operands[0] if root.operands else None
+            for pos, pr in enumerate(params):
+                if pr.name == target:
+                    skip_pos = pos
+                    break
+        for pos, o in enumerate(ins.operands):
+            if pos == skip_pos or o not in table:
+                continue
+            full = _shape_bytes(table[o])
+            pname = params[pos].name if pos < len(params) else None
+            if pname is not None:
+                uses = [i for i in callee if pname in i.operands]
+                if uses and all(u.opcode in ("dynamic-slice", "gather",
+                                             "slice")
+                                for u in uses):
+                    b += sum(u.result_bytes() for u in uses)
+                    continue
+            b += full
+        return b
+    for o in ins.operands:
+        if o in table:
+            b += _shape_bytes(table[o])
+    return b
+
+
+@dataclasses.dataclass
+class HloCosts:
+    flops: float
+    bytes: float
+    coll_counts: dict
+    coll_payload: dict
+    coll_wire: dict
+    dot_count: float
+    coll_operands: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return float(sum(self.coll_wire.values()))
+
+    def to_json(self) -> dict:
+        return {"flops": self.flops, "bytes": self.bytes,
+                "dot_count": self.dot_count,
+                "coll_operands": dict(self.coll_operands),
+                "coll_counts": dict(self.coll_counts),
+                "coll_payload": {k: float(v) for k, v in self.coll_payload.items()},
+                "coll_wire": {k: float(v) for k, v in self.coll_wire.items()},
+                "total_wire_bytes": self.total_wire_bytes}
+
+
+def analyze(text: str, n_devices: int) -> HloCosts:
+    comps, entry = parse_module(text)
+    mult, fusion_comps = _multipliers(comps, entry)
+
+    flops = 0.0
+    nbytes = 0.0
+    dot_count = 0.0
+    coll_counts: dict = defaultdict(float)
+    coll_operands: dict = defaultdict(float)
+    coll_payload: dict = defaultdict(float)
+    coll_wire: dict = defaultdict(float)
+
+    for cname, instrs in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        table = {ins.name: ins.shape_str for ins in instrs}
+        in_fusion = cname in fusion_comps
+        for ins in instrs:
+            if ins.opcode == "dot":
+                flops += m * _dot_flops(ins, table)
+                dot_count += m
+            elif ins.opcode == "convolution":
+                flops += m * _conv_flops(ins, table)
+            op = ins.opcode.removesuffix("-start")
+            if op in ("all-reduce", "all-gather", "reduce-scatter",
+                      "all-to-all", "collective-permute"):
+                s = ins.result_bytes()
+                g = _group_size(ins.attrs, n_devices)
+                if s and g > 1:
+                    coll_counts[op] += m
+                    coll_operands[op] += m * max(len(ins.operands), 1)
+                    coll_payload[op] += m * s
+                    if op == "all-reduce":
+                        w = 2 * s * (g - 1) / g
+                    elif op == "all-gather":
+                        w = s * (g - 1) / g
+                    elif op == "reduce-scatter":
+                        w = s * (g - 1)
+                    elif op == "all-to-all":
+                        w = s * (g - 1) / g
+                    else:
+                        w = s
+                    coll_wire[op] += m * w
+            if not in_fusion and ins.opcode not in _SKIP_BYTES \
+                    and not ins.opcode.endswith("-done"):
+                nbytes += m * _instr_bytes(ins, table, comps)
+    return HloCosts(flops=flops, bytes=nbytes, coll_counts=dict(coll_counts),
+                    coll_payload=dict(coll_payload),
+                    coll_wire=dict(coll_wire), dot_count=dot_count,
+                    coll_operands=dict(coll_operands))

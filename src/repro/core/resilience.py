@@ -1,0 +1,130 @@
+"""Software resilience: replay / replicate+consensus / checksums (paper R9).
+
+The paper (§4.1) describes HPX's resilience model for silent data corruption
+(SDC): after a suspect computation the user may (1) *replay* it and keep the
+result if the corruption vanished, or (2) run *replicates* compared by
+(a) checksums, (b) a consensus function, or (c) a validate function.  We
+implement exactly that API over JAX step functions, plus the checkpoint
+checksums used by restart-based fault tolerance (node loss).
+
+SDC cannot be produced on demand, so tests inject faults through the
+``fault_hook`` seam - the detection/recovery logic is identical either way.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Checksums
+# ---------------------------------------------------------------------------
+def tree_checksum(tree) -> str:
+    """Deterministic content hash of a pytree of arrays (bitwise)."""
+    h = hashlib.blake2b(digest_size=16)
+    for leaf in jax.tree.leaves(tree):
+        a = np.asarray(leaf)
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
+
+
+def finite_check(tree) -> bool:
+    """Cheap on-device validity predicate: every leaf is finite."""
+    leaves = jax.tree.leaves(tree)
+    ok = jnp.array(True)
+    for leaf in leaves:
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            ok = ok & jnp.isfinite(leaf).all()
+    return bool(ok)
+
+
+# ---------------------------------------------------------------------------
+# Replay & replicate
+# ---------------------------------------------------------------------------
+class ResilienceError(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class ResilientRunner:
+    """Wrap a (pure) step function with HPX-style resilience semantics.
+
+    validate: result -> bool         (reject corrupt results, default finite)
+    consensus: [results] -> result   (pick among replicates; default checksum
+                                      majority, ties broken by validate)
+    fault_hook: result -> result     (test seam to inject corruption)
+    """
+
+    fn: Callable
+    validate: Callable[[Any], bool] = finite_check
+    consensus: Optional[Callable[[Sequence[Any]], Any]] = None
+    fault_hook: Optional[Callable[[Any], Any]] = None
+    stats: dict = dataclasses.field(
+        default_factory=lambda: {"replays": 0, "replicas": 0, "rejected": 0})
+
+    def _run_once(self, *args, **kwargs):
+        out = self.fn(*args, **kwargs)
+        if self.fault_hook is not None:
+            out = self.fault_hook(out)
+        return out
+
+    def replay(self, *args, max_retries: int = 3, **kwargs):
+        """HPX task replay: rerun until the result validates."""
+        last = None
+        for attempt in range(max_retries + 1):
+            out = self._run_once(*args, **kwargs)
+            if self.validate(out):
+                return out
+            self.stats["replays"] += 1
+            self.stats["rejected"] += 1
+            last = out
+        raise ResilienceError(
+            f"replay failed after {max_retries + 1} attempts")
+
+    def replicate(self, *args, n: int = 3, **kwargs):
+        """HPX task replication with checksum/consensus/validate selection."""
+        results = [self._run_once(*args, **kwargs) for _ in range(n)]
+        self.stats["replicas"] += n
+        if self.consensus is not None:
+            return self.consensus(results)
+        # default: checksum majority vote
+        sums = [tree_checksum(r) for r in results]
+        counts: dict[str, int] = {}
+        for s in sums:
+            counts[s] = counts.get(s, 0) + 1
+        best, votes = max(counts.items(), key=lambda kv: kv[1])
+        if votes > 1:
+            return results[sums.index(best)]
+        # no agreement: fall back to the validate function (HPX case (c))
+        for r in results:
+            if self.validate(r):
+                return r
+        raise ResilienceError("no replicate passed validation")
+
+
+# ---------------------------------------------------------------------------
+# Straggler mitigation policy (advisory; realized by the launcher)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class StragglerPolicy:
+    """Synchronous updates + asynchronous collectives (the paper's position,
+    R7) plus bounded local accumulation as an explicit escape hatch.
+
+    accumulate_local_steps > 1 behaves like PyTorch-DDP ``no_sync``: workers
+    skip the gradient collective for k-1 steps and reduce the accumulated
+    gradient on step k, trading gradient freshness for straggler tolerance
+    without an asynchronous solver (which the paper rejects - low statistical
+    efficiency of ASGD).
+    """
+    accumulate_local_steps: int = 1
+    backup_worker_fraction: float = 0.0   # drop slowest f of DP groups (doc'd)
+
+    def sync_this_step(self, step: int) -> bool:
+        return (step + 1) % self.accumulate_local_steps == 0

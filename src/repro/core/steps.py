@@ -1,0 +1,418 @@
+"""Step builders: train / prefill / decode, with distribution wired in.
+
+The train step is a ``jax.shard_map`` whose *manual* axes are the
+data-parallel mesh axes ("pod","data") - so the gradient exchange and solver
+are explicit framework code (core/overlap.py: horovod | phylanx | zero1) -
+while the "model" axis stays *auto*: tensor/expert parallelism inside the
+model is delegated to the SPMD partitioner driven by the tiling plans
+(core/sharding.py).  This is DESIGN.md §2's mapping of Phylanx's
+active-messaging collectives onto TPU-native constructs.
+
+Serve steps (prefill/decode) are pure pjit programs; their KV-cache tiling
+plan adapts per architecture (GQA heads sharded when divisible, otherwise
+the cache's sequence dim goes on the model axis) and per shape (long-context
+caches spread over "data" too).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from . import fusion, overlap
+from .granularity import GrainPolicy
+from .sharding import (ShardingRules, default_rules, init_params,
+                       param_shardings, param_structs, set_act_hook,
+                       spec_for)
+from ..models.model import build_model
+from ..optim.optimizers import OptConfig
+from ..optim import optimizers as optim
+
+
+# ---------------------------------------------------------------------------
+# Strategy
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Strategy:
+    name: str = "phylanx"            # phylanx | horovod | zero1 | onebit
+    bucket_bytes: int = 0            # 0 -> runtime-adaptive (GrainPolicy)
+    sequence_parallel: bool = False  # shard residual seq dim on "model"
+    grad_accum: int = 1
+    opt: OptConfig = dataclasses.field(default_factory=OptConfig)
+
+    def resolve_bucket_bytes(self, cfg, mesh, n_tensors: int,
+                             shape: dict) -> int:
+        if self.bucket_bytes:
+            return self.bucket_bytes
+        tot, _ = cfg.n_params()
+        dec = GrainPolicy.derive(
+            n_params=tot, n_tensors=n_tensors,
+            global_batch=shape.get("global_batch", 8),
+            seq=shape.get("seq_len", 1024), d_model=cfg.d_model,
+            n_layers=cfg.n_layers, head_dim=max(cfg.head_dim, 1),
+            dp_degree=dp_degree(mesh))
+        return dec.bucket_bytes
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def dp_degree(mesh) -> int:
+    n = 1
+    for a in dp_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def _serve_cfg(cfg):
+    return dataclasses.replace(cfg, param_dtype="bf16", remat=False)
+
+
+def _batch_spec(mesh, name: str) -> P:
+    axes = dp_axes(mesh)
+    return P(axes if len(axes) > 1 else (axes[0] if axes else None))
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStructs - never allocated; spec step 2)
+# ---------------------------------------------------------------------------
+def input_specs(cfg, shape: dict) -> dict:
+    """Stand-ins for every model input of a (arch x shape) cell."""
+    B, S = shape["global_batch"], shape["seq_len"]
+    kind = shape["kind"]
+    i32 = jnp.int32
+    if kind == "train":
+        out = {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+               "labels": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.family == "encdec":
+            out["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.enc_frames, cfg.d_model), cfg.c_dtype)
+        return out
+    if kind == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.family == "encdec":
+            out["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.enc_frames, cfg.d_model), cfg.c_dtype)
+        return out
+    if kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+    raise ValueError(kind)
+
+
+def batch_shardings(cfg, mesh, shape: dict):
+    spec = _batch_spec(mesh, "batch")
+    sh = {}
+    for k, v in input_specs(cfg, shape).items():
+        # shard dim0 (batch) over dp axes when divisible
+        axes = dp_axes(mesh)
+        n = dp_degree(mesh)
+        use = spec if (v.shape and v.shape[0] % max(n, 1) == 0 and n > 1) else P()
+        sh[k] = NamedSharding(mesh, use)
+    return sh
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class TrainStep:
+    fn: Any                      # jitted (params, opt, batch) -> (metrics, params, opt)
+    fn_nodonate: Any = None      # for resilience replay/replicate (inputs kept)
+    model: Any = None
+    specs: Any = None            # ParamSpec tree
+    param_shardings: Any = None
+    opt_shardings: Any = None
+    batch_shardings: Any = None
+    rules: Any = None
+    plan: Any = None
+    strategy: Any = None
+    mesh: Any = None
+    scatter_mask: Any = None
+
+    def _ndp(self):
+        return dp_degree(self.mesh) if self.mesh is not None else 1
+
+    def init(self, key):
+        params = init_params(self.specs, key)
+        params = jax.device_put(params, self.param_shardings)
+        if self.strategy.name == "zero1":
+            opt = overlap.zero1_init_state(self.specs, self.scatter_mask,
+                                           self._ndp())
+        else:
+            opt = optim.init(params, self.strategy.opt)
+            if self.strategy.name == "onebit":
+                from ..optim.compression import ROW
+                ndp = self._ndp()
+                opt["ef"] = [jnp.zeros((ndp * b.size // ROW, ROW), jnp.float32)
+                             for b in self.plan.buckets]
+        opt = jax.device_put(opt, self.opt_shardings)
+        return params, opt
+
+    def param_structs(self):
+        return param_structs(self.specs)
+
+    def opt_structs(self):
+        if self.strategy.name == "zero1":
+            z = lambda: jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                param_structs(self.specs))
+            return {"count": jax.ShapeDtypeStruct((), jnp.int32),
+                    "m": z(), "v": z()}
+        zeros = lambda: jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+            param_structs(self.specs))
+        out = {"count": jax.ShapeDtypeStruct((), jnp.int32)}
+        if self.strategy.opt.kind == "adamw":
+            out["m"], out["v"] = zeros(), zeros()
+        elif self.strategy.opt.kind == "momentum":
+            out["m"] = zeros()
+        if self.strategy.name == "onebit":
+            from ..optim.compression import ROW
+            ndp = self._ndp()
+            out["ef"] = [jax.ShapeDtypeStruct((ndp * b.size // ROW, ROW),
+                                              jnp.float32)
+                         for b in self.plan.buckets]
+        return out
+
+
+def make_train_step(cfg, mesh, strategy: Strategy, shape: dict) -> TrainStep:
+    model = build_model(cfg)
+    specs = model.specs()
+    rules = default_rules(sequence_parallel=strategy.sequence_parallel)
+    p_shard = param_shardings(specs, mesh, rules)
+    axes = dp_axes(mesh)
+    ndp = dp_degree(mesh)
+    structs = param_structs(specs)
+    n_tensors = len(jax.tree.leaves(structs))
+    bucket_bytes = strategy.resolve_bucket_bytes(cfg, mesh, n_tensors, shape)
+    oc = strategy.opt
+
+    plan = None
+    f32_structs = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), structs)
+    scatter_mask = None
+    if strategy.name == "zero1":
+        scatter_mask = overlap.zero1_scatter_mask(specs, mesh, rules, ndp)
+    elif strategy.name == "onebit":
+        from ..optim import compression
+        plan = compression.make_plan(f32_structs, ndp)
+
+    # tensors safe to coalesce into fused buckets: not sharded on "model"
+    # (flattening TP-sharded grads de-shards them; see overlap.py)
+    def _fusable(sp):
+        pspec = spec_for(mesh, rules, sp.shape, sp.dims)
+        return not any("model" in ((p,) if isinstance(p, str) else tuple(p or ()))
+                       for p in pspec)
+    fuse_mask = jax.tree.map(_fusable, specs,
+                             is_leaf=lambda x: hasattr(x, "dims"))
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def grads_of(params, batch):
+        if strategy.grad_accum <= 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+        k = strategy.grad_accum
+        micro = jax.tree.map(
+            lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]), batch)
+
+        def acc(carry, mb):
+            l, g = jax.value_and_grad(loss_fn)(params, mb)
+            return (carry[0] + l / k,
+                    jax.tree.map(lambda a, b: a + b / k, carry[1], g)), None
+        zero_g = jax.tree.map(lambda s: jnp.zeros(s.shape, jnp.float32),
+                              structs)
+        (l, g), _ = jax.lax.scan(acc, (jnp.zeros((), jnp.float32), zero_g),
+                                 micro)
+        return l, g
+
+    def body(params, opt_state, batch):
+        # inside shard_map the batch dim is already local: constrain only
+        # auto-axis (model) placements; seq joins under sequence parallelism
+        set_act_hook(mesh, rules.with_overrides(batch=None))
+        loss, grads = grads_of(params, batch)
+        loss = jax.lax.pmean(loss, axes) if axes else loss
+        if strategy.name == "zero1":
+            params, opt_state, m = overlap.zero1_update(
+                grads, opt_state, params, oc, axes, scatter_mask)
+        elif strategy.name == "onebit" and axes:
+            from ..optim import compression
+            grads_r, new_ef = compression.exchange_onebit(
+                grads, opt_state["ef"], axes, plan)
+            inner = {k: v for k, v in opt_state.items() if k != "ef"}
+            params, inner, m = optim.update(grads_r, inner, params, oc)
+            opt_state = dict(inner, ef=new_ef)
+        else:
+            if axes:
+                grads_r = (overlap.exchange_horovod(grads, axes)
+                           if strategy.name == "horovod" else
+                           overlap.exchange_phylanx(grads, axes, bucket_bytes,
+                                                    fuse_mask=fuse_mask))
+            else:
+                grads_r = grads
+            params, opt_state, m = optim.update(grads_r, opt_state, params, oc)
+        metrics = {"loss": loss, "grad_norm": m["grad_norm"]}
+        return metrics, params, opt_state
+
+    if axes:
+        if strategy.name == "zero1":
+            opt_specs = overlap.zero1_state_shard_specs(scatter_mask, axes)
+        elif strategy.name == "onebit":
+            opt_specs = _opt_skeleton(oc)
+            opt_specs["ef"] = [P(tuple(axes)) for _ in plan.buckets]
+        else:
+            opt_specs = _opt_skeleton(oc)  # prefix tree of P()
+        bspec = _batch_spec(mesh, "batch")
+        fn = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(), opt_specs, bspec),
+            out_specs=(P(), P(), opt_specs),
+            axis_names=set(axes), check_vma=False)
+    else:
+        fn = body
+
+    # shardings for init/IO
+    if strategy.name == "onebit":
+        f32_specs = optim.init_specs(specs, oc)
+        opt_sh = param_shardings(f32_specs, mesh, rules)
+        dp_spec = P(axes if len(axes) > 1 else (axes[0] if axes else None))
+        opt_sh["ef"] = [NamedSharding(mesh, dp_spec) for _ in plan.buckets]
+    elif strategy.name == "zero1":
+        def _state_sh(sp, sc):
+            pspec = spec_for(mesh, rules, sp.shape, sp.dims)
+            parts = list(pspec) + [None] * (len(sp.shape) - len(pspec))
+            if sc and axes:
+                parts[0] = axes if len(axes) > 1 else axes[0]
+            return NamedSharding(mesh, P(*parts))
+        per = jax.tree.map(_state_sh, specs, scatter_mask,
+                           is_leaf=lambda x: hasattr(x, "dims"))
+        opt_sh = {"count": NamedSharding(mesh, P()), "m": per,
+                  "v": jax.tree.map(_state_sh, specs, scatter_mask,
+                                    is_leaf=lambda x: hasattr(x, "dims"))}
+    else:
+        f32_specs = optim.init_specs(specs, oc)
+        opt_sh = param_shardings(f32_specs, mesh, rules)
+
+    b_shard = batch_shardings(cfg, mesh, shape)
+    metrics_sh = {"loss": NamedSharding(mesh, P()),
+                  "grad_norm": NamedSharding(mesh, P())}
+    jitted = jax.jit(fn, donate_argnums=(0, 1),
+                     in_shardings=(p_shard, opt_sh, b_shard),
+                     out_shardings=(metrics_sh, p_shard, opt_sh))
+    nodonate = jax.jit(fn, in_shardings=(p_shard, opt_sh, b_shard),
+                       out_shardings=(metrics_sh, p_shard, opt_sh))
+    return TrainStep(fn=jitted, fn_nodonate=nodonate, model=model, specs=specs,
+                     param_shardings=p_shard, opt_shardings=opt_sh,
+                     batch_shardings=b_shard,
+                     rules=rules, plan=plan, strategy=strategy, mesh=mesh,
+                     scatter_mask=scatter_mask)
+
+
+def _opt_skeleton(oc: OptConfig):
+    """PartitionSpec prefix-tree for dense optimizer state (all replicated
+    over manual dp axes; 'model' sharding is auto)."""
+    out = {"count": P()}
+    if oc.kind == "adamw":
+        out["m"], out["v"] = P(), P()
+    elif oc.kind == "momentum":
+        out["m"] = P()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Serve steps
+# ---------------------------------------------------------------------------
+def decode_rules(cfg, mesh, shape: dict) -> ShardingRules:
+    """Tiling plan for KV caches / recurrent state, adapted per cell."""
+    r = default_rules()
+    model_n = mesh.shape.get("model", 1)
+    over = {}
+    if model_n > 1 and cfg.n_kv_heads % model_n != 0:
+        # GQA cache can't shard by head: tile the sequence dim instead
+        over["kv_seq"] = "model"
+        over["kv_heads"] = None
+    if shape["global_batch"] == 1:
+        # long-context single stream: spread the cache over "data" too
+        if over.get("kv_seq") == "model":
+            over["kv_seq"] = ("data", "model")
+        else:
+            over["kv_seq"] = "data"
+    return r.with_overrides(**over)
+
+
+@dataclasses.dataclass
+class ServeStep:
+    fn: Any
+    model: Any
+    specs: Any
+    param_shardings: Any
+    cache_specs: Any            # None for prefill
+    cache_shardings: Any
+    batch_shardings: Any
+    rules: ShardingRules
+
+
+def make_prefill_step(cfg, mesh, strategy: Strategy, shape: dict) -> ServeStep:
+    scfg = _serve_cfg(cfg)
+    model = build_model(scfg)
+    specs = model.specs()
+    rules = decode_rules(scfg, mesh, shape)
+    p_shard = param_shardings(specs, mesh, rules)
+    S = shape["seq_len"]
+
+    def fn(params, batch):
+        set_act_hook(mesh, rules)
+        return model.prefill(params, batch, S)
+
+    cache_sp = model.cache_specs(shape["global_batch"], S)
+    cache_sh = param_shardings(cache_sp, mesh, rules)
+    jitted = jax.jit(fn, in_shardings=(p_shard, batch_shardings(scfg, mesh, shape)),
+                     out_shardings=(NamedSharding(mesh, P()), cache_sh))
+    return ServeStep(fn=jitted, model=model, specs=specs,
+                     param_shardings=p_shard, cache_specs=cache_sp,
+                     cache_shardings=cache_sh,
+                     batch_shardings=batch_shardings(scfg, mesh, shape),
+                     rules=rules)
+
+
+def make_decode_step(cfg, mesh, strategy: Strategy, shape: dict) -> ServeStep:
+    scfg = _serve_cfg(cfg)
+    model = build_model(scfg)
+    specs = model.specs()
+    rules = decode_rules(scfg, mesh, shape)
+    p_shard = param_shardings(specs, mesh, rules)
+    B, S = shape["global_batch"], shape["seq_len"]
+    cache_sp = model.cache_specs(B, S)
+    cache_sh = param_shardings(cache_sp, mesh, rules)
+
+    def fn(params, cache, batch, pos):
+        set_act_hook(mesh, rules)
+        return model.decode_step(params, cache, batch, pos)
+
+    jitted = jax.jit(
+        fn,
+        in_shardings=(p_shard, cache_sh, batch_shardings(scfg, mesh, shape),
+                      NamedSharding(mesh, P())),
+        out_shardings=(NamedSharding(mesh, P()), cache_sh),
+        donate_argnums=(1,))
+    return ServeStep(fn=jitted, model=model, specs=specs,
+                     param_shardings=p_shard, cache_specs=cache_sp,
+                     cache_shardings=cache_sh,
+                     batch_shardings=batch_shardings(scfg, mesh, shape),
+                     rules=rules)
+
+
+def make_step(cfg, mesh, strategy: Strategy, shape: dict):
+    kind = shape["kind"]
+    if kind == "train":
+        return make_train_step(cfg, mesh, strategy, shape)
+    if kind == "prefill":
+        return make_prefill_step(cfg, mesh, strategy, shape)
+    if kind == "decode":
+        return make_decode_step(cfg, mesh, strategy, shape)
+    raise ValueError(kind)

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the performance-critical compute layers.
+
+  flash_attention  - causal GQA flash attention fwd (BlockSpec VMEM tiling)
+  mamba2_scan      - SSD chunked scan with on-chip carried state
+  onebit           - 1-bit gradient pack/unpack (error feedback)
+
+ops.py is the jit'd dispatch layer (TPU: compiled kernel; CPU: interpret or
+jnp oracle); ref.py holds the pure-jnp oracles the tests compare against.
+"""
+from . import ops, ref  # noqa: F401

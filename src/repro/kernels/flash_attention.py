@@ -1,0 +1,123 @@
+"""Causal GQA FlashAttention forward - Pallas TPU kernel.
+
+Grid: (B, H, num_q_blocks, num_kv_blocks) with the kv dimension innermost,
+so each (b, h, iq) row streams kv blocks sequentially while the accumulators
+(o, m, l) persist in VMEM scratch.  Causal block skipping happens at the
+grid level on real TPUs via masking inside ``pl.when`` (the block's work is
+predicated off); the BlockSpecs keep every tile MXU-aligned (block sizes are
+multiples of 128 on the lane dim) and the working set
+(bq*d + 2*bk*d + bq*bk) * 4B inside VMEM.
+
+GQA is expressed in the k/v index_maps: query head h reads kv head
+h // (H // Hkv) - no materialized head expansion.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, block_q: int, block_kv: int, seq: int,
+            causal: bool, window):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_lo = iq * block_q
+    k_lo = ik * block_kv
+    # block-level causal/window skip (predicated off on TPU)
+    run = jnp.bool_(True)
+    if causal:
+        run = run & (q_lo + block_q - 1 >= k_lo)
+    if window is not None:
+        run = run & (q_lo - (k_lo + block_kv - 1) < window)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)            # [bq, d]
+        k = k_ref[0, 0].astype(jnp.float32)            # [bk, d]
+        v = v_ref[0, 0].astype(jnp.float32)
+        lg = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # [bq, bk]
+        q_pos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+        k_pos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+        diff = q_pos - k_pos
+        if causal:
+            lg = jnp.where(diff < 0, NEG_INF, lg)
+        if window is not None:
+            lg = jnp.where(diff >= window, NEG_INF, lg)
+
+        m_prev = m_scr[:, :1]                          # [bq, 1]
+        l_prev = l_scr[:, :1]
+        m_cur = jnp.max(lg, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        m_safe = jnp.where(m_new <= NEG_INF, 0.0, m_new)
+        p = jnp.exp(lg - m_safe)                       # [bq, bk]
+        corr = jnp.exp(m_prev - m_safe)                # [bq, 1]
+        l_new = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = l_scr[:, :1]
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    scale=None, block_q: int = 128, block_kv: int = 128,
+                    interpret: bool = False):
+    """q: [B, H, S, d]; k, v: [B, Hkv, S, d] -> [B, H, S, d]."""
+    B, H, S, d = q.shape
+    Hkv = k.shape[1]
+    assert H % Hkv == 0
+    group = H // Hkv
+    block_q = min(block_q, S)
+    block_kv = min(block_kv, S)
+    assert S % block_q == 0 and S % block_kv == 0
+    nq, nk = S // block_q, S // block_kv
+    scale = scale or 1.0 / math.sqrt(d)
+
+    grid = (B, H, nq, nk)
+    kern = functools.partial(
+        _kernel, scale=scale, block_q=block_q, block_kv=block_kv, seq=S,
+        causal=causal, window=window)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda b, h, iq, ik: (b, h // group, ik, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda b, h, iq, ik: (b, h // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 128), jnp.float32),   # m
+            pltpu.VMEM((block_q, 128), jnp.float32),   # l
+            pltpu.VMEM((block_q, d), jnp.float32),     # o accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

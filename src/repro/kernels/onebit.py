@@ -1,0 +1,101 @@
+"""1-bit gradient compression with error feedback - Pallas TPU kernels.
+
+The paper (§3.7) credits CNTK's Data-Parallel SGD with the 1-bit trick:
+quantize gradients to sign bits + a per-row L1 scale, add the quantization
+error to the next step's gradient (error feedback).  These kernels do the
+pack/unpack on-chip so the wire payload is bits, not floats - a
+distributed-optimization feature of the framework (strategy
+``compression="onebit"``).
+
+quantize:  g, err [R, C] f32 -> packed u32 [R, C/32], scale [R, 1], err'
+dequantize: packed, scale -> +-scale  [R, C]
+
+Grid over row blocks; C is the lane dim (multiple of 128); the pack is a
+shift-and-add over a [bm, C/32, 32] view.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _quant_kernel(g_ref, e_ref, packed_ref, scale_ref, err_ref):
+    g = g_ref[...].astype(jnp.float32)
+    e = e_ref[...].astype(jnp.float32)
+    q = g + e
+    scale = jnp.mean(jnp.abs(q), axis=1, keepdims=True)      # [bm, 1]
+    signs = (q >= 0)
+    deq = jnp.where(signs, scale, -scale)
+    err_ref[...] = (q - deq).astype(err_ref.dtype)
+    scale_ref[...] = jnp.broadcast_to(scale, scale_ref.shape).astype(
+        scale_ref.dtype)
+    bm, C = q.shape
+    bits = signs.reshape(bm, C // 32, 32).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    packed_ref[...] = jnp.sum(bits * weights[None, None, :],
+                              axis=-1).astype(jnp.uint32)
+
+
+def _dequant_kernel(packed_ref, scale_ref, out_ref):
+    packed = packed_ref[...]                                  # [bm, C/32]
+    scale = scale_ref[:, :1].astype(jnp.float32)              # [bm, 1]
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (packed[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1)
+    bm = packed.shape[0]
+    signs = bits.reshape(bm, -1).astype(jnp.float32)
+    out_ref[...] = ((2.0 * signs - 1.0) * scale).astype(out_ref.dtype)
+
+
+def onebit_quantize(g, err, *, block_rows: int = 256,
+                    interpret: bool = False):
+    """g, err: [R, C] (C % 128 == 0). -> (packed u32 [R,C/32],
+    scale [R,128] (lane-replicated), new_err [R,C])."""
+    R, C = g.shape
+    assert C % 128 == 0, C
+    block_rows = min(block_rows, R)
+    assert R % block_rows == 0
+    grid = (R // block_rows,)
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, C), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, C), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, C // 32), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 128), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, C), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, C // 32), jnp.uint32),
+            jax.ShapeDtypeStruct((R, 128), jnp.float32),
+            jax.ShapeDtypeStruct((R, C), g.dtype),
+        ],
+        interpret=interpret,
+    )(g, err)
+
+
+def onebit_dequantize(packed, scale, *, block_rows: int = 256,
+                      interpret: bool = False):
+    """packed: [R, C/32] u32; scale: [R, 128] -> [R, C] f32."""
+    R, Cp = packed.shape
+    C = Cp * 32
+    block_rows = min(block_rows, R)
+    assert R % block_rows == 0
+    grid = (R // block_rows,)
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, Cp), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 128), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, C), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, C), jnp.float32),
+        interpret=interpret,
+    )(packed, scale)

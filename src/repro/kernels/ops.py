@@ -1,0 +1,66 @@
+"""Jitted dispatch wrappers for the Pallas kernels.
+
+On TPU the kernels run compiled; everywhere else (this container is
+CPU-only) they run under ``interpret=True`` - same kernel body, Python
+evaluation - or fall back to the jnp oracle.  Model code calls these
+wrappers; tests sweep shapes/dtypes against kernels/ref.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import mamba2_scan as _m2
+from . import onebit as _ob
+from . import ref
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_kv", "impl"))
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    block_q: int = 128, block_kv: int = 128,
+                    impl: str = "auto"):
+    """q: [B, H, S, d]; k, v: [B, Hkv, S, d] -> [B, H, S, d]."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_kv=block_kv,
+                               interpret=(impl == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "impl"))
+def mamba2_chunk_scan(xdt, a, Bm, Cm, *, chunk: int = 128,
+                      impl: str = "auto"):
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return ref.mamba2_scan_ref(xdt, a, Bm, Cm)
+    return _m2.mamba2_chunk_scan(xdt, a, Bm, Cm, chunk=chunk,
+                                 interpret=(impl == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "impl"))
+def onebit_quantize(g, err, *, block_rows: int = 256, impl: str = "auto"):
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        signs, scale, new_err = ref.onebit_quantize_ref(g, err)
+        return signs, scale, new_err
+    return _ob.onebit_quantize(g, err, block_rows=block_rows,
+                               interpret=(impl == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "impl"))
+def onebit_dequantize(packed_or_signs, scale, *, block_rows: int = 256,
+                      impl: str = "auto"):
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return ref.onebit_dequantize_ref(packed_or_signs, scale)
+    return _ob.onebit_dequantize(packed_or_signs, scale,
+                                 block_rows=block_rows,
+                                 interpret=(impl == "interpret"))

@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Flash attention oracle: materialized softmax attention (causal / windowed,
+# GQA via head mapping q_head -> kv_head * (H // Hkv)).
+# ---------------------------------------------------------------------------
+def flash_attention_ref(q, k, v, *, causal: bool = True, window=None,
+                        scale=None):
+    """q: [B, H, S, d]; k, v: [B, Hkv, S, d] -> [B, H, S, d]."""
+    B, H, S, d = q.shape
+    Hkv = k.shape[1]
+    scale = scale or 1.0 / math.sqrt(d)
+    if Hkv != H:
+        k = jnp.repeat(k, H // Hkv, axis=1)
+        v = jnp.repeat(v, H // Hkv, axis=1)
+    lg = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    pos = jnp.arange(S)
+    diff = pos[:, None] - pos[None, :]
+    mask = jnp.zeros((S, S), jnp.float32)
+    if causal:
+        mask = jnp.where(diff < 0, NEG_INF, mask)
+    if window is not None:
+        mask = jnp.where(diff >= window, NEG_INF, mask)
+    lg = lg + mask[None, None]
+    p = jax.nn.softmax(lg, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(q.dtype), v)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD oracle: direct sequential recurrence in fp32.
+#   h_t = exp(a_t) * h_{t-1} + B_t (x_t)     (outer product into [P, N])
+#   y_t = C_t . h_t
+# ---------------------------------------------------------------------------
+def mamba2_scan_ref(xdt, a, Bm, Cm):
+    """xdt: [B, H, L, P] (dt-weighted inputs); a: [B, H, L] log-decays;
+    Bm, Cm: [B, H, L, N].  Returns y [B, H, L, P] and final state
+    [B, H, P, N]."""
+    Bsz, H, L, P = xdt.shape
+    N = Bm.shape[-1]
+
+    def step(h, inp):
+        x_t, a_t, b_t, c_t = inp
+        h = h * jnp.exp(a_t)[..., None, None] + \
+            x_t[..., :, None] * b_t[..., None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", h, c_t)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    inputs = (jnp.moveaxis(xdt.astype(jnp.float32), 2, 0),
+              jnp.moveaxis(a.astype(jnp.float32), 2, 0),
+              jnp.moveaxis(Bm.astype(jnp.float32), 2, 0),
+              jnp.moveaxis(Cm.astype(jnp.float32), 2, 0))
+    h, ys = jax.lax.scan(step, h0, inputs)
+    return jnp.moveaxis(ys, 0, 2).astype(xdt.dtype), h
+
+
+# ---------------------------------------------------------------------------
+# 1-bit gradient compression oracle (error feedback): per-row sign + L1 scale
+# ---------------------------------------------------------------------------
+def onebit_quantize_ref(g, err):
+    """g, err: [R, C] fp32 -> (signs bool [R, C], scale [R, 1], new_err)."""
+    q = g + err
+    scale = jnp.mean(jnp.abs(q), axis=1, keepdims=True)
+    signs = q >= 0
+    deq = jnp.where(signs, scale, -scale)
+    new_err = q - deq
+    return signs, scale, new_err
+
+
+def onebit_dequantize_ref(signs, scale):
+    return jnp.where(signs, scale, -scale)

@@ -1,0 +1,32 @@
+"""Mesh construction.  A FUNCTION, not a module-level constant: importing
+this module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips when multi_pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(data: int = 1, model: int = 1, pod: int = 1):
+    """Small mesh over host devices for tests/examples/benchmarks."""
+    shape, axes = [], []
+    for n, a in ((pod, "pod"), (data, "data"), (model, "model")):
+        if n > 1 or a in ("data", "model"):
+            shape.append(n)
+            axes.append(a)
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def mesh_devices(mesh) -> int:
+    n = 1
+    for v in mesh.shape.values():
+        n *= v
+    return n

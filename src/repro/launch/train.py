@@ -1,0 +1,136 @@
+"""Training launcher: the end-to-end driver (deliverable b).
+
+Wires every subsystem together: config registry -> mesh -> strategy ->
+shard_map train step -> synthetic pipeline w/ prefetch -> async checkpoints
+-> resilience (replay / replicate / finite-validation) -> restart.
+
+Fault tolerance drill (used by examples/elastic_restart.py and tests):
+  * --fail-at-step N     raises mid-run AFTER checkpoints exist (simulated
+                         node loss);
+  * rerunning with --resume picks up the latest checkpoint - including onto
+    a different --data/--model mesh (elastic restart via checkpoint
+    resharding);
+  * --resilience replay  wraps the step in HPX-style replay (retry on
+    non-finite results); replicate votes across replicas by checksum.
+
+Example:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --tiny \
+      --steps 30 --batch 8 --seq 64 --strategy phylanx --ckpt /tmp/ck
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core import steps as steps_lib
+from repro.core.futures import Pipeline
+from repro.core.resilience import ResilientRunner, StragglerPolicy, finite_check
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.data.pipeline import LMStream, Prefetcher
+from repro.launch.mesh import make_local_mesh
+
+
+def build(args):
+    cfg = get_config(args.arch, tiny=args.tiny)
+    if args.tiny:
+        cfg = dataclasses.replace(cfg, remat=args.remat)
+    mesh = make_local_mesh(data=args.data, model=args.model)
+    shape = {"seq_len": args.seq, "global_batch": args.batch, "kind": "train"}
+    strategy = steps_lib.Strategy(
+        name=args.strategy, grad_accum=args.grad_accum,
+        sequence_parallel=args.seq_parallel)
+    step = steps_lib.make_train_step(cfg, mesh, strategy, shape)
+    stream = LMStream(
+        vocab=cfg.vocab, batch=args.batch, seq=args.seq, seed=args.seed,
+        frames_dim=cfg.d_model if cfg.family == "encdec" else 0,
+        frames_len=cfg.enc_frames if cfg.family == "encdec" else 0)
+    return cfg, mesh, step, stream
+
+
+def run(args) -> dict:
+    cfg, mesh, step, stream = build(args)
+    params, opt = step.init(jax.random.PRNGKey(args.seed))
+    start = 0
+
+    ckpt = CheckpointManager(args.ckpt, keep=3) if args.ckpt else None
+    if ckpt is not None and args.resume:
+        latest = ckpt.latest_step()
+        if latest is not None:
+            start, (params, opt) = ckpt.restore(
+                (params, opt),
+                shardings=(step.param_shardings, step.opt_shardings))
+            print(f"[train] resumed from step {start}")
+
+    prefetch = Prefetcher(stream, step.batch_shardings)
+    runner = ResilientRunner(step.fn_nodonate)
+    policy = StragglerPolicy(accumulate_local_steps=1)
+    inflight = Pipeline(depth=2)
+    losses = []
+    t0 = time.time()
+    for it in range(start, args.steps):
+        batch = prefetch.get(it)
+        if args.fail_at_step is not None and it == args.fail_at_step \
+                and not args.resume:
+            raise RuntimeError(f"injected node failure at step {it}")
+        if args.resilience == "replay":
+            metrics, params, opt = runner.replay(params, opt, batch)
+        elif args.resilience == "replicate":
+            metrics, params, opt = runner.replicate(params, opt, batch, n=2)
+        else:
+            metrics, params, opt = step.fn(params, opt, batch)
+        inflight.push(it, metrics)
+        if (it + 1) % args.log_every == 0:
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            dt = (time.time() - t0) / args.log_every
+            print(f"[train] step {it + 1:5d} loss {loss:8.4f} "
+                  f"gnorm {float(metrics['grad_norm']):8.3f} "
+                  f"{dt * 1e3:8.1f} ms/step", flush=True)
+            t0 = time.time()
+        if ckpt is not None and (it + 1) % args.ckpt_every == 0:
+            ckpt.save(it + 1, (params, opt),
+                      meta={"arch": args.arch, "loss": float(metrics["loss"])})
+    inflight.drain()
+    if ckpt is not None:
+        ckpt.save(args.steps, (params, opt), meta={"arch": args.arch})
+        ckpt.wait()
+    final = float(metrics["loss"])
+    print(f"[train] done: final loss {final:.4f}")
+    return {"final_loss": final, "losses": losses,
+            "params": params, "step": args.steps}
+
+
+def parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b", choices=ARCH_IDS)
+    ap.add_argument("--tiny", action="store_true", default=True)
+    ap.add_argument("--full", dest="tiny", action="store_false")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--data", type=int, default=1)
+    ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--strategy", default="phylanx",
+                    choices=["phylanx", "horovod", "zero1", "onebit"])
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--log-every", type=int, default=5)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--fail-at-step", type=int, default=None)
+    ap.add_argument("--resilience", default="none",
+                    choices=["none", "replay", "replicate"])
+    return ap
+
+
+if __name__ == "__main__":
+    run(parser().parse_args())

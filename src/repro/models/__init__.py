@@ -1,0 +1,2 @@
+from . import attention, blocks, cnn, layers, model, moe, ssm  # noqa: F401
+from .model import build_model  # noqa: F401

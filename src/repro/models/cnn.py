@@ -1,0 +1,56 @@
+"""The paper's benchmark model: a 4-layer 1-D CNN for Human Activity
+Recognition (Fig. 1 compares Phylanx vs Horovod on its forward pass,
+minibatch 8000).  Deduced from the cited Kaggle convo1d project: HAR
+windows of 128 timesteps x 9 sensor channels, 6 activity classes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.sharding import ParamSpec
+
+
+def har_cnn_specs(*, in_ch: int = 9, width: int = 64, classes: int = 6,
+                  kernel: int = 3) -> dict:
+    c = width
+    return {
+        "conv1": {"w": ParamSpec((kernel, in_ch, c), ("conv", None, "channels")),
+                  "b": ParamSpec((c,), ("channels",), init="zeros")},
+        "conv2": {"w": ParamSpec((kernel, c, c), ("conv", None, "channels")),
+                  "b": ParamSpec((c,), ("channels",), init="zeros")},
+        "conv3": {"w": ParamSpec((kernel, c, 2 * c), ("conv", None, "channels")),
+                  "b": ParamSpec((2 * c,), ("channels",), init="zeros")},
+        "conv4": {"w": ParamSpec((kernel, 2 * c, 2 * c), ("conv", None, "channels")),
+                  "b": ParamSpec((2 * c,), ("channels",), init="zeros")},
+        "head": {"w": ParamSpec((2 * c, classes), (None, None)),
+                 "b": ParamSpec((classes,), (None,), init="zeros")},
+    }
+
+
+def _conv1d(x, w, b):
+    """x: [B, L, Cin]; w: [K, Cin, Cout] (VALID padding, as Conv1D default)."""
+    y = jax.lax.conv_general_dilated(
+        x, w.astype(x.dtype), window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"))
+    return y + b.astype(x.dtype)
+
+
+def har_cnn_forward(params, x):
+    """x: [B, 128, 9] -> logits [B, classes]."""
+    h = jax.nn.relu(_conv1d(x, params["conv1"]["w"], params["conv1"]["b"]))
+    h = jax.nn.relu(_conv1d(h, params["conv2"]["w"], params["conv2"]["b"]))
+    # maxpool /2 between the two conv pairs (Kaggle architecture)
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 1), (1, 2, 1),
+                              "VALID")
+    h = jax.nn.relu(_conv1d(h, params["conv3"]["w"], params["conv3"]["b"]))
+    h = jax.nn.relu(_conv1d(h, params["conv4"]["w"], params["conv4"]["b"]))
+    h = jnp.mean(h, axis=1)  # global average pool
+    return h @ params["head"]["w"].astype(h.dtype) + params["head"]["b"].astype(h.dtype)
+
+
+def har_cnn_loss(params, batch):
+    lg = har_cnn_forward(params, batch["x"]).astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lg, axis=-1)
+    ll = jnp.take_along_axis(lg, batch["y"][:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - ll)

@@ -1,0 +1,140 @@
+"""Shared neural-net layers (functional; params are plain pytrees).
+
+Every parameter is declared through ``ParamSpec`` with *logical dims* so the
+core sharding engine (tiling plans) can place it on any mesh - the paper's
+architecture-agnostic requirement R8: models never mention mesh axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..core.sharding import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rms_norm(x, w, eps: float = 1e-6):
+    """Statistics in fp32, scaling in the input dtype (Flax/Megatron
+    convention).  Keeping the full tensor in compute dtype keeps the
+    backward gradient chain - and its tensor-parallel collectives - in
+    bf16 instead of fp32 (§Perf chameleon iteration A4: halves the
+    activation-gradient wire bytes)."""
+    msq = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jax.lax.rsqrt(msq + eps).astype(x.dtype)
+    return x * scale * w.astype(x.dtype)
+
+
+def layer_norm(x, w, b, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    y = (x - mu.astype(x.dtype)) * inv.astype(x.dtype)
+    return y * w.astype(x.dtype) + b.astype(x.dtype)
+
+
+def norm_specs(d: int, kind: str) -> dict:
+    if kind == "rms":
+        return {"w": ParamSpec((d,), ("embed",), init="ones")}
+    return {"w": ParamSpec((d,), ("embed",), init="ones"),
+            "b": ParamSpec((d,), ("embed",), init="zeros")}
+
+
+def apply_norm(x, p, kind: str, eps: float = 1e-6):
+    if kind == "rms":
+        return rms_norm(x, p["w"], eps)
+    return layer_norm(x, p["w"], p["b"], eps)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float = 10000.0):
+    return theta ** (-jnp.arange(0, head_dim // 2, dtype=jnp.float32)
+                     / (head_dim // 2))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., None, :]                        # [..., S, 1, hd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_embedding(seq: int, d: int):
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def mlp_specs(d: int, ff: int, kind: str = "swiglu") -> dict:
+    if kind == "swiglu":
+        return {
+            "w_gate": ParamSpec((d, ff), ("embed", "d_ff")),
+            "w_up": ParamSpec((d, ff), ("embed", "d_ff")),
+            "w_down": ParamSpec((ff, d), ("d_ff", "embed")),
+        }
+    return {  # gelu
+        "w_up": ParamSpec((d, ff), ("embed", "d_ff")),
+        "b_up": ParamSpec((ff,), ("d_ff",), init="zeros"),
+        "w_down": ParamSpec((ff, d), ("d_ff", "embed")),
+        "b_down": ParamSpec((d,), ("embed",), init="zeros"),
+    }
+
+
+def apply_mlp(x, p, kind: str = "swiglu"):
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"].astype(x.dtype)) * (x @ p["w_up"].astype(x.dtype))
+        return h @ p["w_down"].astype(x.dtype)
+    h = jax.nn.gelu(x @ p["w_up"].astype(x.dtype) + p["b_up"].astype(x.dtype))
+    return h @ p["w_down"].astype(x.dtype) + p["b_down"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+def embed_specs(vocab: int, d: int) -> dict:
+    return {"tok": ParamSpec((vocab, d), ("vocab", "embed"), init="scaled",
+                             scale=0.02)}
+
+
+def embed(tokens, p):
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def unembed_specs(d: int, vocab: int) -> dict:
+    return {"w": ParamSpec((d, vocab), ("embed", "vocab"))}
+
+
+def logits(x, p):
+    return x @ p["w"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+def softmax_xent(lg, labels, mask=None):
+    """Token-mean cross entropy; fp32 for the reduction."""
+    lg = lg.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lg, axis=-1)
+    ll = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

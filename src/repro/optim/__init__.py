@@ -1,0 +1,2 @@
+from . import optimizers  # noqa: F401
+from .optimizers import OptConfig  # noqa: F401

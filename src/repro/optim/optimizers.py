@@ -1,0 +1,125 @@
+"""Solvers (paper terminology): synchronous SGD / momentum / AdamW.
+
+Two state layouts:
+  * dense   - m/v mirror the parameter tree (replicated over data axes like
+              the params); used by the "horovod" and "phylanx" strategies.
+  * zero1   - ZeRO stage 1: the parameter tree is flattened through the same
+              fusion plan used for gradient collectives, and m/v/updates
+              live only on each rank's shard of every bucket; the train step
+              reduce-scatters gradients into the shard and all-gathers
+              updated parameters (core/overlap.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.sharding import ParamSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"          # adamw | momentum | sgd
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    momentum: float = 0.9
+    grad_clip: float = 1.0
+
+
+# ---------------------------------------------------------------------------
+# Dense layout
+# ---------------------------------------------------------------------------
+def init_specs(param_specs, oc: OptConfig):
+    """ParamSpec tree for the optimizer state (so it shards like params)."""
+    f32 = lambda s: ParamSpec(s.shape, s.dims, jnp.float32, "zeros")
+    zeros = lambda: jax.tree.map(f32, param_specs,
+                                 is_leaf=lambda x: isinstance(x, ParamSpec))
+    st = {"count": ParamSpec((), (), jnp.int32, "zeros")}
+    if oc.kind == "adamw":
+        st["m"] = zeros()
+        st["v"] = zeros()
+    elif oc.kind == "momentum":
+        st["m"] = zeros()
+    return st
+
+
+def init(params, oc: OptConfig):
+    zeros = lambda: jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    st = {"count": jnp.zeros((), jnp.int32)}
+    if oc.kind == "adamw":
+        st["m"] = zeros()
+        st["v"] = zeros()
+    elif oc.kind == "momentum":
+        st["m"] = zeros()
+    return st
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gn
+
+
+def _adamw_leaf(g, p, m, v, count, oc: OptConfig):
+    g = g.astype(jnp.float32)
+    m = oc.b1 * m + (1 - oc.b1) * g
+    v = oc.b2 * v + (1 - oc.b2) * g * g
+    mh = m / (1 - oc.b1 ** count)
+    vh = v / (1 - oc.b2 ** count)
+    upd = mh / (jnp.sqrt(vh) + oc.eps) + oc.weight_decay * p.astype(jnp.float32)
+    new_p = (p.astype(jnp.float32) - oc.lr * upd).astype(p.dtype)
+    return new_p, m, v
+
+
+def update(grads, state, params, oc: OptConfig):
+    """Dense update. Returns (new_params, new_state, metrics)."""
+    grads, gn = clip_by_global_norm(grads, oc.grad_clip)
+    count = state["count"] + 1
+    if oc.kind == "adamw":
+        out = jax.tree.map(
+            lambda g, p, m, v: _adamw_leaf(g, p, m, v, count, oc),
+            grads, params, state["m"], state["v"])
+        leaves, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+        new_p = jax.tree.unflatten(treedef, [l[0] for l in leaves])
+        new_m = jax.tree.unflatten(treedef, [l[1] for l in leaves])
+        new_v = jax.tree.unflatten(treedef, [l[2] for l in leaves])
+        return new_p, {"count": count, "m": new_m, "v": new_v}, {"grad_norm": gn}
+    if oc.kind == "momentum":
+        new_m = jax.tree.map(lambda m, g: oc.momentum * m + g.astype(jnp.float32),
+                             state["m"], grads)
+        new_p = jax.tree.map(lambda p, m: (p.astype(jnp.float32) - oc.lr * m
+                                           ).astype(p.dtype), params, new_m)
+        return new_p, {"count": count, "m": new_m}, {"grad_norm": gn}
+    # plain sgd
+    new_p = jax.tree.map(lambda p, g: (p.astype(jnp.float32)
+                                       - oc.lr * g.astype(jnp.float32)
+                                       ).astype(p.dtype), params, grads)
+    return new_p, {"count": count}, {"grad_norm": gn}
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1 sharded layout (used inside the shard_map train step)
+# ---------------------------------------------------------------------------
+def zero1_shard_update(g_shard, p_shard, m, v, count, oc: OptConfig,
+                       clip_scale):
+    """AdamW on 1-D bucket shards (all fp32)."""
+    g = g_shard.astype(jnp.float32) * clip_scale
+    m = oc.b1 * m + (1 - oc.b1) * g
+    v = oc.b2 * v + (1 - oc.b2) * g * g
+    mh = m / (1 - oc.b1 ** count)
+    vh = v / (1 - oc.b2 ** count)
+    upd = mh / (jnp.sqrt(vh) + oc.eps) + oc.weight_decay * p_shard
+    return p_shard - oc.lr * upd, m, v

@@ -1,0 +1,23 @@
+"""Subprocess runner for multi-device tests (host platform devices are
+fixed at first jax init, so anything needing >1 device runs in a child)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_devices(code: str, n_devices: int = 8, timeout: int = 560) -> str:
+    """Run `code` in a subprocess with n host devices; returns stdout.
+    Raises on nonzero exit (stderr in the message)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    p = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    if p.returncode != 0:
+        raise RuntimeError(f"subprocess failed:\nSTDOUT:\n{p.stdout}\n"
+                           f"STDERR:\n{p.stderr[-4000:]}")
+    return p.stdout

@@ -1,0 +1,96 @@
+"""Checkpointing: roundtrip, checksums, atomicity, GC, async, restart."""
+import json
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import CheckpointManager
+
+
+def _tree(key=0):
+    k = jax.random.PRNGKey(key)
+    return {"w": jax.random.normal(k, (8, 16)),
+            "nested": {"b": jnp.arange(5, dtype=jnp.int32),
+                       "s": jnp.float32(3.5)}}
+
+
+def test_roundtrip(tmp_path):
+    cm = CheckpointManager(tmp_path, async_save=False)
+    t = _tree()
+    cm.save(10, t, meta={"note": "hi"})
+    step, back = cm.restore(t)
+    assert step == 10
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert cm.meta["note"] == "hi"
+
+
+def test_async_save_then_restore(tmp_path):
+    cm = CheckpointManager(tmp_path, async_save=True)
+    t = _tree(1)
+    fut = cm.save(3, t)
+    cm.wait()
+    step, back = cm.restore(t)
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(back["w"]), np.asarray(t["w"]))
+
+
+def test_checksum_corruption_detected(tmp_path):
+    cm = CheckpointManager(tmp_path, async_save=False)
+    t = _tree(2)
+    path = cm.save(1, t)
+    # flip a byte in the first array file
+    f = next(path.glob("arr_*.npy"))
+    raw = bytearray(f.read_bytes())
+    raw[-1] ^= 0xFF
+    f.write_bytes(bytes(raw))
+    with pytest.raises(IOError, match="checksum"):
+        cm.restore(t)
+    # non-strict mode loads anyway
+    step, _ = cm.restore(t, strict_checksums=False)
+    assert step == 1
+
+
+def test_gc_keeps_last_k(tmp_path):
+    cm = CheckpointManager(tmp_path, keep=2, async_save=False)
+    t = _tree(3)
+    for s in (1, 2, 3, 4):
+        cm.save(s, t)
+    assert cm.all_steps() == [3, 4]
+
+
+def test_leaf_count_mismatch_raises(tmp_path):
+    cm = CheckpointManager(tmp_path, async_save=False)
+    cm.save(1, _tree(4))
+    with pytest.raises(ValueError, match="leaves"):
+        cm.restore({"only": jnp.zeros(3)})
+
+
+def test_restart_resumes_training(tmp_path):
+    """Full drill: train, 'crash', resume; trajectories must continue."""
+    import argparse
+    from repro.launch import train as train_mod
+
+    args = train_mod.parser().parse_args([
+        "--arch", "qwen2.5-3b", "--steps", "8", "--batch", "4",
+        "--seq", "16", "--ckpt", str(tmp_path), "--ckpt-every", "4",
+        "--log-every", "4", "--fail-at-step", "6"])
+    with pytest.raises(RuntimeError, match="injected node failure"):
+        train_mod.run(args)
+    # resume completes and produces finite loss continuing from step 4
+    args2 = train_mod.parser().parse_args([
+        "--arch", "qwen2.5-3b", "--steps", "8", "--batch", "4",
+        "--seq", "16", "--ckpt", str(tmp_path), "--ckpt-every", "4",
+        "--log-every", "4", "--resume"])
+    out = train_mod.run(args2)
+    assert np.isfinite(out["final_loss"])
+
+    # and the resumed run must equal an uninterrupted run bit-for-bit
+    args3 = train_mod.parser().parse_args([
+        "--arch", "qwen2.5-3b", "--steps", "8", "--batch", "4",
+        "--seq", "16", "--log-every", "4"])
+    ref = train_mod.run(args3)
+    assert abs(ref["final_loss"] - out["final_loss"]) < 1e-4

@@ -1,0 +1,97 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mamba2_scan import mamba2_chunk_scan
+from repro.kernels.onebit import onebit_dequantize, onebit_quantize
+
+
+@pytest.mark.parametrize("B,H,Hkv,S,d", [
+    (1, 4, 2, 256, 64),
+    (2, 8, 8, 128, 32),
+    (1, 4, 1, 256, 64),
+    (1, 2, 2, 512, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(B, H, Hkv, S, d, dtype, causal):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, S, d), dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, S, d), dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, S, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol,
+                               rtol=tol)
+
+
+def test_flash_attention_window_and_blocks():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 2, 512, 64))
+    k = jax.random.normal(ks[1], (1, 2, 512, 64))
+    v = jax.random.normal(ks[2], (1, 2, 512, 64))
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=128)
+    for bq, bk in [(128, 128), (256, 64), (64, 256)]:
+        out = flash_attention(q, k, v, causal=True, window=128,
+                              block_q=bq, block_kv=bk, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("B,H,L,P,N,chunk", [
+    (1, 2, 256, 32, 16, 64),
+    (2, 4, 128, 64, 64, 32),
+    (1, 1, 512, 16, 8, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mamba2_kernel_sweep(B, H, L, P, N, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    xdt = jax.random.normal(ks[0], (B, H, L, P), dtype) * 0.5
+    a = -jnp.abs(jax.random.normal(ks[1], (B, H, L))) * 0.1
+    Bm = jax.random.normal(ks[2], (B, H, L, N), dtype) * 0.5
+    Cm = jax.random.normal(ks[3], (B, H, L, N), dtype) * 0.5
+    y, st = mamba2_chunk_scan(xdt, a, Bm, Cm, chunk=chunk, interpret=True)
+    yr, str_ = ref.mamba2_scan_ref(xdt, a, Bm, Cm)
+    tol = 6e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(str_), atol=tol,
+                               rtol=tol)
+
+
+@pytest.mark.parametrize("R,C,bm", [(256, 512, 128), (64, 128, 64),
+                                    (128, 1024, 128)])
+def test_onebit_kernel_roundtrip(R, C, bm):
+    ks = jax.random.split(jax.random.PRNGKey(3), 2)
+    g = jax.random.normal(ks[0], (R, C))
+    e = jax.random.normal(ks[1], (R, C)) * 0.1
+    packed, scale, err = onebit_quantize(g, e, block_rows=bm, interpret=True)
+    deq = onebit_dequantize(packed, scale, block_rows=bm, interpret=True)
+    signs_r, scale_r, err_r = ref.onebit_quantize_ref(g, e)
+    deq_r = ref.onebit_dequantize_ref(signs_r, scale_r)
+    np.testing.assert_allclose(np.asarray(deq), np.asarray(deq_r), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(err), np.asarray(err_r), atol=1e-6)
+    # dequantized + error reconstructs the input exactly
+    np.testing.assert_allclose(np.asarray(deq + err), np.asarray(g + e),
+                               atol=1e-5)
+
+
+def test_onebit_jnp_pack_matches_kernel_pack():
+    from repro.optim import compression
+    ks = jax.random.split(jax.random.PRNGKey(4), 2)
+    g = jax.random.normal(ks[0], (64, 1024))
+    e = jnp.zeros((64, 1024))
+    packed_k, scale_k, _ = onebit_quantize(g, e, block_rows=64,
+                                           interpret=True)
+    signs = np.asarray(g) >= 0
+    packed_j = compression.pack_bits(jnp.asarray(signs))
+    np.testing.assert_array_equal(np.asarray(packed_k), np.asarray(packed_j))
+    # unpack roundtrip
+    np.testing.assert_array_equal(
+        np.asarray(compression.unpack_bits(packed_j)), signs)

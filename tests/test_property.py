@@ -1,0 +1,150 @@
+"""Property-based tests (hypothesis) on the system's invariants:
+tensor-fusion pack/unpack, tiling-plan divisibility, grain policy bounds,
+1-bit compression error feedback."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fusion
+from repro.core.granularity import GrainPolicy
+from repro.core.sharding import DEFAULT_RULES, ShardingRules, spec_for
+from repro.launch.mesh import make_local_mesh
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+_shapes = st.lists(
+    st.tuples(st.integers(1, 6), st.integers(1, 64), st.integers(1, 8)),
+    min_size=1, max_size=12)
+
+
+@given(shapes=_shapes, cap=st.integers(64, 1 << 16),
+       pad=st.sampled_from([1, 4, 8, 32]))
+def test_fusion_roundtrip_any_shapes(shapes, cap, pad):
+    tree = {f"p{i}": np.arange(int(np.prod(s)), dtype=np.float32).reshape(s)
+            + i for i, s in enumerate(shapes)}
+    plan = fusion.make_plan(tree, cap_bytes=cap, pad_to=pad)
+    bufs = fusion.pack(tree, plan)
+    # every bucket respects padding divisibility
+    for buf, b in zip(bufs, plan.buckets):
+        assert buf.shape[0] % pad == 0
+        assert buf.shape[0] == b.size
+    back = fusion.unpack(bufs, plan)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(back[k]), tree[k])
+
+
+@given(shapes=_shapes)
+def test_fusion_preserves_flatten_order(shapes):
+    """Entries inside buckets must keep flatten order (overlap property)."""
+    tree = [np.zeros(s, np.float32) for s in shapes]
+    plan = fusion.make_plan(tree, cap_bytes=1 << 12)
+    seen = []
+    for b in plan.buckets:
+        seen.extend(e.index for e in b.entries)
+    # per-dtype order is ascending; single dtype here -> globally ascending
+    assert seen == sorted(seen)
+
+
+@given(mixed=st.lists(st.sampled_from(["f32", "i32", "bf16"]), min_size=1,
+                      max_size=8))
+def test_fusion_buckets_are_dtype_homogeneous(mixed):
+    dt = {"f32": np.float32, "i32": np.int32, "bf16": jnp.bfloat16}
+    tree = [jnp.zeros((7,), dt[m]) for m in mixed]
+    plan = fusion.make_plan(tree, cap_bytes=1 << 20)
+    for b in plan.buckets:
+        dts = {jnp.dtype(dt[mixed[e.index]]) for e in b.entries}
+        assert len(dts) == 1
+
+
+@given(dims=st.lists(st.sampled_from(
+    ["batch", "seq", "heads", "kv_heads", "d_ff", "vocab", "embed", None]),
+    min_size=1, max_size=4),
+    sizes=st.lists(st.integers(1, 512), min_size=4, max_size=4))
+def test_spec_for_only_shards_divisible_dims(dims, sizes):
+    mesh = make_local_mesh(data=1, model=1)  # 1-device: everything replicates
+    rules = ShardingRules(DEFAULT_RULES)
+    shape = tuple(sizes[:len(dims)])
+    spec = spec_for(mesh, rules, shape, tuple(dims))
+    # on a 1-device mesh every dim must be replicated
+    assert all(p is None for p in spec)
+
+
+@given(n_params=st.integers(1 << 16, 1 << 34),
+       dp=st.sampled_from([1, 2, 8, 16, 32]),
+       batch=st.sampled_from([8, 64, 256]))
+def test_grain_policy_bounds(n_params, dp, batch):
+    dec = GrainPolicy.derive(n_params=n_params, n_tensors=50,
+                             global_batch=batch, seq=1024, d_model=1024,
+                             n_layers=12, head_dim=64, dp_degree=dp)
+    assert 1 <= dec.n_microbatches <= max(batch // max(dp, 1), 1)
+    assert dec.bucket_bytes >= 1
+    if dp > 1:
+        assert dec.bucket_bytes <= 64 << 20 or \
+            dec.bucket_bytes >= n_params  # tiny models: single bucket ok
+    assert dec.attn_block_q % 8 == 0
+    assert dec.remat in ("none", "block", "full")
+
+
+@given(seed=st.integers(0, 2 ** 16), rows=st.sampled_from([2, 4, 8]))
+def test_onebit_error_feedback_is_lossless_in_aggregate(seed, rows):
+    """EF invariant: deq + new_err == g + old_err exactly (no signal lost)."""
+    from repro.kernels.ref import onebit_dequantize_ref, onebit_quantize_ref
+    rng = np.random.default_rng(seed)
+    g = rng.standard_normal((rows, 64)).astype(np.float32)
+    e = rng.standard_normal((rows, 64)).astype(np.float32) * 0.5
+    signs, scale, e2 = onebit_quantize_ref(jnp.asarray(g), jnp.asarray(e))
+    deq = onebit_dequantize_ref(signs, scale)
+    np.testing.assert_allclose(np.asarray(deq + e2), g + e, atol=1e-5)
+
+
+@given(seed=st.integers(0, 2 ** 16))
+def test_checksum_detects_any_bitflip(seed):
+    from repro.core.resilience import tree_checksum
+    rng = np.random.default_rng(seed)
+    tree = {"a": rng.standard_normal((4, 5)).astype(np.float32),
+            "b": rng.integers(0, 100, (3,)).astype(np.int32)}
+    c1 = tree_checksum(tree)
+    flip = dict(tree)
+    a = tree["a"].copy()
+    a_view = a.view(np.uint32).reshape(-1)
+    a_view[rng.integers(0, a_view.size)] ^= np.uint32(1 << int(rng.integers(0, 32)))
+    flip["a"] = a
+    assert tree_checksum(flip) != c1
+
+
+def test_exchange_phylanx_fuse_mask_partitions_correctly():
+    """Sharding-aware fusion (§Perf A2): masked-out leaves bypass buckets
+    but every leaf still comes back with its own value (identity fn)."""
+    from repro.core import overlap
+    import jax
+
+    tree = {"big_sharded": jnp.arange(64.0).reshape(8, 8),
+            "small_a": jnp.ones(3), "small_b": jnp.ones(5) * 2}
+    mask = {"big_sharded": False, "small_a": True, "small_b": True}
+    # monkey-style: run through the fusion path with pmean over zero axes
+    # is impossible in-process (1 device), so check plan partitioning only
+    from repro.core import fusion
+    leaves = [v for k, v in sorted(tree.items()) if mask[k]]
+    plan = fusion.make_plan(leaves, cap_bytes=1 << 20)
+    assert plan.n_leaves == 2
+    total = sum(b.total for b in plan.buckets)
+    assert total == 8
+
+
+def test_zero1_scatter_mask_rules():
+    """dim0 must divide dp, not be model-claimed, and be big enough."""
+    import jax.numpy as jnp
+    from repro.core import overlap
+    from repro.core.sharding import ParamSpec, default_rules
+    from repro.launch.mesh import make_local_mesh
+    mesh = make_local_mesh(data=1, model=1)   # ndp=1 -> nothing scatters
+    specs = {"w": ParamSpec((48, 1024, 1024), ("layers", "embed", "d_ff")),
+             "b": ParamSpec((7,), ("embed",))}
+    mask = overlap.zero1_scatter_mask(specs, mesh, default_rules(), ndp=1)
+    assert mask == {"w": False, "b": False}
+    mask16 = overlap.zero1_scatter_mask(specs, mesh, default_rules(), ndp=16)
+    assert mask16["w"] is True      # 48 % 16 == 0, big, dim0 free
+    assert mask16["b"] is False     # too small / indivisible

@@ -1,0 +1,88 @@
+"""HPX-style software resilience: replay, replicate+consensus, checksums,
+straggler policy (paper R9 / §4.1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.resilience import (ResilienceError, ResilientRunner,
+                                   StragglerPolicy, finite_check,
+                                   tree_checksum)
+
+
+class Flaky:
+    """Injects corruption on the first n calls (the fault_hook seam)."""
+
+    def __init__(self, n_bad: int, kind: str = "nan"):
+        self.n_bad = n_bad
+        self.calls = 0
+        self.kind = kind
+
+    def __call__(self, out):
+        self.calls += 1
+        if self.calls <= self.n_bad:
+            if self.kind == "nan":
+                return {"y": out["y"] * jnp.nan}
+            return {"y": out["y"] + 1.0}   # silent bit-flip style corruption
+        return out
+
+
+def _step(x):
+    return {"y": x * 2.0}
+
+
+def test_replay_recovers_from_transient_corruption():
+    r = ResilientRunner(_step, fault_hook=Flaky(2))
+    out = r.replay(jnp.ones(3), max_retries=3)
+    np.testing.assert_allclose(np.asarray(out["y"]), 2.0)
+    assert r.stats["replays"] == 2
+
+
+def test_replay_gives_up_on_persistent_corruption():
+    r = ResilientRunner(_step, fault_hook=Flaky(100))
+    with pytest.raises(ResilienceError):
+        r.replay(jnp.ones(3), max_retries=2)
+
+
+def test_replicate_majority_vote_beats_one_silent_corruption():
+    # one corrupted replicate among three: checksum majority picks the pair
+    r = ResilientRunner(_step, fault_hook=Flaky(1, kind="flip"))
+    out = r.replicate(jnp.ones(3), n=3)
+    np.testing.assert_allclose(np.asarray(out["y"]), 2.0)
+
+
+def test_replicate_falls_back_to_validate():
+    # first two replicas are distinct AND invalid (no checksum majority);
+    # validate must pick the finite third
+    class EachDifferent:
+        calls = 0
+
+        def __call__(self, out):
+            self.calls += 1
+            if self.calls < 3:
+                bad = out["y"] * self.calls
+                return {"y": bad.at[0].set(jnp.nan)}
+            return out
+    r = ResilientRunner(_step, fault_hook=EachDifferent())
+    out = r.replicate(jnp.ones(3), n=3)
+    assert finite_check(out)
+
+
+def test_consensus_function_is_used():
+    r = ResilientRunner(_step,
+                        consensus=lambda results: results[-1])
+    out = r.replicate(jnp.ones(3), n=2)
+    np.testing.assert_allclose(np.asarray(out["y"]), 2.0)
+
+
+def test_checksum_stable_and_sensitive():
+    t = {"a": jnp.arange(4.0)}
+    assert tree_checksum(t) == tree_checksum({"a": jnp.arange(4.0)})
+    assert tree_checksum(t) != tree_checksum({"a": jnp.arange(4.0) + 1e-7})
+
+
+def test_straggler_policy_no_sync_cadence():
+    p = StragglerPolicy(accumulate_local_steps=4)
+    syncs = [p.sync_this_step(i) for i in range(8)]
+    assert syncs == [False, False, False, True] * 2
+    assert StragglerPolicy().sync_this_step(0)

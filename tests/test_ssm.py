@@ -1,0 +1,131 @@
+"""Chunked SSM algorithms vs their exact sequential recurrences."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.sharding import init_params
+from repro.models import ssm
+
+
+class _Cfg:
+    d_model = 64
+    expand = 2
+    ssm_head_dim = 16
+    ssm_state = 8
+    ssm_groups = 1
+    ssm_d_conv = 4
+    n_heads = 4
+
+
+def _roll_decode(step_fn, init_state, x, p, cfg):
+    """Run the single-token step over a sequence."""
+    B, L, D = x.shape
+    state = init_state
+    outs = []
+    for t in range(L):
+        y, state = step_fn(x[:, t:t + 1], state, p, cfg)
+        outs.append(y)
+    return jnp.concatenate(outs, axis=1), state
+
+
+def test_mamba2_chunked_equals_stepwise():
+    cfg = _Cfg()
+    p = init_params(ssm.mamba2_specs(cfg.d_model, expand=cfg.expand,
+                                     head_dim=cfg.ssm_head_dim,
+                                     state=cfg.ssm_state),
+                    jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model)) * 0.5
+    y_par, st_par = ssm.mamba2_chunked(x, p, cfg, chunk=16, return_state=True)
+    y_seq, st_seq = _roll_decode(ssm.mamba2_step,
+                                 ssm.mamba2_init_state(2, cfg), x, p, cfg)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_seq),
+                               rtol=2e-3, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_par["ssm"]),
+                               np.asarray(st_seq["ssm"]), rtol=2e-3,
+                               atol=2e-4)
+
+
+def test_mamba2_chunk_size_invariance():
+    cfg = _Cfg()
+    p = init_params(ssm.mamba2_specs(cfg.d_model, expand=cfg.expand,
+                                     head_dim=cfg.ssm_head_dim,
+                                     state=cfg.ssm_state),
+                    jax.random.PRNGKey(2))
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 96, cfg.d_model)) * 0.5
+    y1 = ssm.mamba2_chunked(x, p, cfg, chunk=8)
+    y2 = ssm.mamba2_chunked(x, p, cfg, chunk=32)
+    y3 = ssm.mamba2_chunked(x, p, cfg, chunk=96)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4,
+                               atol=2e-5)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y3), rtol=2e-4,
+                               atol=2e-5)
+
+
+def test_mlstm_chunked_equals_stepwise():
+    cfg = _Cfg()
+    p = init_params(ssm.mlstm_specs(cfg.d_model, n_heads=cfg.n_heads,
+                                    expand=cfg.expand),
+                    jax.random.PRNGKey(4))
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 48, cfg.d_model)) * 0.5
+    y_par = ssm.mlstm_chunked(x, p, cfg, chunk=12)
+    y_seq, _ = _roll_decode(ssm.mlstm_step, ssm.mlstm_init_state(2, cfg),
+                            x, p, cfg)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_seq),
+                               rtol=3e-3, atol=3e-4)
+
+
+def test_mlstm_state_carries_across_prefill_decode():
+    cfg = _Cfg()
+    p = init_params(ssm.mlstm_specs(cfg.d_model, n_heads=cfg.n_heads,
+                                    expand=cfg.expand),
+                    jax.random.PRNGKey(6))
+    x = jax.random.normal(jax.random.PRNGKey(7), (1, 33, cfg.d_model)) * 0.5
+    # full stepwise
+    y_all, _ = _roll_decode(ssm.mlstm_step, ssm.mlstm_init_state(1, cfg),
+                            x, p, cfg)
+    # chunked prefill on first 32, then one decode step
+    _, st = ssm.mlstm_chunked(x[:, :32], p, cfg, chunk=16, return_state=True)
+    y_last, _ = ssm.mlstm_step(x[:, 32:33], st, p, cfg)
+    np.testing.assert_allclose(np.asarray(y_last[:, 0]),
+                               np.asarray(y_all[:, -1]), rtol=3e-3,
+                               atol=3e-4)
+
+
+def test_slstm_apply_equals_stepwise():
+    cfg = _Cfg()
+    p = init_params(ssm.slstm_specs(cfg.d_model, n_heads=cfg.n_heads),
+                    jax.random.PRNGKey(8))
+    x = jax.random.normal(jax.random.PRNGKey(9), (2, 20, cfg.d_model)) * 0.5
+    y_par = ssm.slstm_apply(x, p, cfg)
+    y_seq, _ = _roll_decode(ssm.slstm_step, ssm.slstm_init_state(2, cfg),
+                            x, p, cfg)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_seq),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_causal_conv_matches_cache_mode():
+    w = jax.random.normal(jax.random.PRNGKey(0), (4, 6)) * 0.3
+    b = jnp.zeros(6)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 6))
+    full, _ = ssm.causal_conv1d(x, w, b)
+    cache = jnp.zeros((2, 3, 6))
+    ys = []
+    for t in range(12):
+        y, cache = ssm.causal_conv1d(x[:, t:t + 1], w, b, cache=cache)
+        ys.append(y)
+    step = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(step), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_mamba2_decay_is_stable_long_sequence():
+    cfg = _Cfg()
+    p = init_params(ssm.mamba2_specs(cfg.d_model, expand=cfg.expand,
+                                     head_dim=cfg.ssm_head_dim,
+                                     state=cfg.ssm_state),
+                    jax.random.PRNGKey(10))
+    x = jax.random.normal(jax.random.PRNGKey(11), (1, 512, cfg.d_model))
+    y = ssm.mamba2_chunked(x, p, cfg, chunk=64)
+    assert bool(jnp.isfinite(y).all())
