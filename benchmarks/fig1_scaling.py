@@ -43,8 +43,8 @@ from repro.optim.optimizers import OptConfig
 
 n = {n}
 strategy = "{strategy}"
-mesh = jax.make_mesh((n,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((n,), ("data",))
 oc = OptConfig(kind="sgd", lr=1e-2, grad_clip=1e9)
 specs = cnn.har_cnn_specs(width=64)
 params = init_params(specs, jax.random.PRNGKey(0))
@@ -61,7 +61,8 @@ def body(params, x, y):
                                 params, oc)
     return loss, params
 
-fn = jax.jit(jax.shard_map(body, mesh=mesh,
+from repro.core.compat import shard_map
+fn = jax.jit(shard_map(body, mesh=mesh,
                            in_specs=(P(), P("data"), P("data")),
                            out_specs=(P(), P()), axis_names={{"data"}},
                            check_vma=False))

@@ -20,8 +20,8 @@ from repro.core import pipeline  # noqa: E402
 
 def main():
     S, d = 4, 256
-    mesh = jax.make_mesh((S,), ("stage",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((S,), ("stage",))
     Ws = jax.random.normal(jax.random.PRNGKey(0), (S, d, d)) / d ** 0.5
     Ws = jax.device_put(Ws, NamedSharding(mesh, P("stage")))
 

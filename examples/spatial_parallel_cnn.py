@@ -23,8 +23,8 @@ from repro.models import cnn  # noqa: E402
 
 
 def main():
-    mesh = jax.make_mesh((4,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((4,), ("data",))
     params = init_params(cnn.har_cnn_specs(), jax.random.PRNGKey(0))
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 128, 9))
 
@@ -39,7 +39,8 @@ def main():
         y = cnn._conv1d(xt, w, b)
         return y  # [B, tile, Cout] after VALID conv over the halo'd tile
 
-    fn = jax.jit(jax.shard_map(
+    from repro.core.compat import shard_map
+    fn = jax.jit(shard_map(
         lambda x, w, b: sharded_conv(x, w, b), mesh=mesh,
         in_specs=(P(None, "data"), P(), P()),
         out_specs=P(None, "data"), check_vma=False))

@@ -31,7 +31,7 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
-from ..core.futures import FuturizedGraph, PhyFuture
+from ..core.futures import FuturizedGraph, Lane, PhyFuture
 
 
 def _checksum(a: np.ndarray) -> str:
@@ -44,24 +44,40 @@ def _checksum(a: np.ndarray) -> str:
 
 class CheckpointManager:
     def __init__(self, directory: str | Path, *, keep: int = 3,
-                 async_save: bool = True):
+                 async_save: bool = True,
+                 graph: Optional[FuturizedGraph] = None):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
         self.async_save = async_save
-        self._graph = FuturizedGraph(max_workers=2)
+        self._own_graph = graph is None
+        self._graph = graph if graph is not None else FuturizedGraph(
+            max_workers=2, name="checkpoint")
         self._pending: Optional[PhyFuture] = None
 
     # -- save -----------------------------------------------------------------
-    def save(self, step: int, tree: Any, *, meta: Optional[dict] = None):
-        """Snapshot a pytree. Returns immediately when async."""
-        self.wait()
+    def save(self, step: int, tree: Any, *, meta: Optional[dict] = None,
+             deps: tuple = ()):
+        """Snapshot a pytree.  Returns immediately when async: the file I/O
+        becomes a ``Lane.CHECKPOINT`` graph node that runs after ``deps``
+        (e.g. the step-retirement future) and after the previous save (writes
+        chain by dependency edge, never by blocking the caller).  The
+        device->host transfer stays synchronous: leaf buffers may be donated
+        to the next dispatched step, so values must be captured now.
+
+        Fail fast: if the previous async save already finished with an
+        error, raise it here rather than silently poisoning every later
+        write in the dependency chain until close()."""
+        if self._pending is not None and self._pending.done():
+            failed, self._pending = self._pending, None
+            exc = failed.exception()
+            if exc is not None:
+                raise exc
         leaves, treedef = jax.tree.flatten(tree)
-        # device->host (synchronous: values must be consistent with `step`)
         host = [np.asarray(x) for x in leaves]
         treedef_str = str(treedef)
 
-        def _write():
+        def _write(*_deps):
             tmp = self.dir / f".tmp_step_{step:08d}"
             final = self.dir / f"step_{step:08d}"
             if tmp.exists():
@@ -86,14 +102,26 @@ class CheckpointManager:
             return final
 
         if self.async_save:
-            self._pending = self._graph.defer(_write)
+            order = deps if self._pending is None else (*deps, self._pending)
+            self._pending = self._graph.defer(
+                _write, *order, lane=Lane.CHECKPOINT, name=f"ckpt:{step}")
             return self._pending
+        for d in deps:
+            d.result()
         return _write()
 
     def wait(self):
+        """Barrier: block until every pending save has hit disk."""
         if self._pending is not None:
             self._pending.result()
             self._pending = None
+
+    def close(self):
+        """Shutdown barrier: drain pending saves; stop our workers if we
+        own the graph (shared runtimes are shut down by their owner)."""
+        self.wait()
+        if self._own_graph:
+            self._graph.shutdown(wait=True)
 
     def _gc(self):
         steps = sorted(self.all_steps())

@@ -1,0 +1,127 @@
+"""Version shims for jax APIs that moved between releases.
+
+The repo targets current jax but must run (and be tested) on older
+installs:
+
+  * ``jax.shard_map`` graduated from ``jax.experimental.shard_map`` (and
+    ``jax.sharding.AxisType`` appeared alongside it — handled in
+    launch/mesh.py).  Import ``shard_map`` from here, never from jax.
+  * ``lax.axis_size`` does not exist on jax 0.4.x; ``axis_size`` here
+    falls back to the statically-evaluated ``psum(1, axis)`` idiom.
+  * on jax 0.4.x, a ``lax.all_gather`` inside a *partially-manual*
+    shard_map (auto axes present) crashes XLA's SPMD partitioner
+    (``Check failed: IsManualSubgroup``); ``all_gather`` here emulates it
+    with dynamic_update_slice + psum on old jax — 2x the wire bytes of a
+    ring all-gather, but correct, and only on the fallback path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+_NEW_SHARD_MAP = hasattr(jax, "shard_map")
+
+if _NEW_SHARD_MAP:
+    shard_map = jax.shard_map
+else:  # jax <= 0.4.x: adapt the new kwargs onto the experimental API
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+                  check_vma=True):
+        # new axis_names= (manual axes) is the complement of old auto=
+        auto = (frozenset(mesh.axis_names) - frozenset(axis_names)
+                if axis_names is not None else frozenset())
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma,
+                          auto=auto)
+
+
+# On jax 0.4.x, sharding propagation loses the manual-subgroup annotation
+# through `while` ops (lax.scan) inside a partially-manual shard_map, so
+# any later collective over the manual axes fails the partitioner's
+# RET_CHECK.  layer_scan unrolls small scans into a python loop on old jax
+# (identical math, bigger HLO); above the cap it falls back to real scan -
+# full-scale shapes would pay an unacceptable compile blow-up, and they are
+# not run on old jax.
+_UNROLL_CAP = 64
+
+
+def layer_scan(f, init, xs, length=None):
+    """``lax.scan`` with the old-jax partial-manual workaround above."""
+    n = length if length is not None else jax.tree.leaves(xs)[0].shape[0]
+    if _NEW_SHARD_MAP or n > _UNROLL_CAP:
+        return jax.lax.scan(f, init, xs, length=length)
+    carry, ys = init, []
+    for i in range(n):
+        xi = None if xs is None else jax.tree.map(lambda a: a[i], xs)
+        carry, y = f(carry, xi)
+        ys.append(y)
+    if not ys or all(y is None for y in ys):
+        return carry, None
+    return carry, jax.tree.map(lambda *vs: jnp.stack(vs), *ys)
+
+
+# On jax 0.4.x, a collective over *manual* mesh axes whose operand still
+# carries an *auto*-axis sharding (e.g. pmean over "data" of a
+# tensor-parallel-sharded gradient) hits XLA RET_CHECK failures in the SPMD
+# partitioner ("Cross-partition allreduce must be in (partial) manual
+# partitioning mode").  The workaround is to replicate such operands across
+# the auto axes just before the collective; the pjit-level output shardings
+# re-shard afterwards.  Costs extra wire on the fallback path only.
+NEEDS_DP_OPERAND_REPLICATION = not _NEW_SHARD_MAP
+
+
+def replicate_dp_operands(tree, mesh):
+    """Constrain every leaf replicated across auto axes (old jax only)."""
+    if not NEEDS_DP_OPERAND_REPLICATION:
+        return tree
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    sh = NamedSharding(mesh, P())
+    return jax.tree.map(
+        lambda x: jax.lax.with_sharding_constraint(x, sh), tree)
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a mapped axis (or product over a tuple of axes)."""
+    if not isinstance(axis_name, str):
+        n = 1
+        for a in axis_name:
+            n *= axis_size(a)
+        return n
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis_name)
+    return lax.psum(1, axis_name)   # statically evaluated on concrete input
+
+
+def all_gather(x: jax.Array, axis_name, *, axis: int = 0,
+               tiled: bool = True) -> jax.Array:
+    """``lax.all_gather`` where the partitioner supports it; emulated via
+    dynamic_update_slice + psum inside old-jax partial-manual bodies."""
+    if _NEW_SHARD_MAP:
+        return lax.all_gather(x, axis_name, axis=axis, tiled=tiled)
+    names = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
+    n = axis_size(names)
+    # ``anchor`` ties compiler-generated constants to the input so sharding
+    # propagation keeps them inside the manual subgroup (free-floating
+    # constants get auto shardings and abort the old partitioner).
+    anchor = x.ravel()[0] * 0
+    # rank without lax.axis_index (it lowers to a PartitionId op the old
+    # partitioner rejects inside partial-manual regions): psum_scatter of a
+    # replicated iota hands rank r the block [r] of the cross-rank sum,
+    # i.e. the scalar n * r
+    r = lax.psum_scatter(
+        jnp.arange(n, dtype=jnp.float32) + anchor.astype(jnp.float32),
+        axis_name, scatter_dimension=0, tiled=True)
+    idx = jnp.round(r[0] / n).astype(jnp.int32)
+    if tiled:
+        shape = list(x.shape)
+        shape[axis] *= n
+        start = [0] * x.ndim
+        start[axis] = idx * x.shape[axis]
+        buf = jnp.zeros(shape, x.dtype) + anchor
+        buf = lax.dynamic_update_slice(buf, x, tuple(start))
+    else:
+        buf = jnp.zeros((n,) + x.shape, x.dtype) + anchor
+        buf = lax.dynamic_update_slice(buf, x[None], (idx,) + (0,) * x.ndim)
+    return lax.psum(buf, axis_name)

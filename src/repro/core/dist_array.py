@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from . import collectives
+from . import collectives, compat
 from .sharding import ShardingRules, sharding_for, spec_for
 
 
@@ -76,6 +76,6 @@ class TiledArray:
             return collectives.halo_exchange(x, axis, halo, dim=dim)
 
         out_parts = list(in_spec) + [None] * (len(self.dims) - len(in_spec))
-        fn = jax.shard_map(body, mesh=self.mesh, in_specs=in_spec,
-                           out_specs=P(*out_parts), check_vma=False)
+        fn = compat.shard_map(body, mesh=self.mesh, in_specs=in_spec,
+                              out_specs=P(*out_parts), check_vma=False)
         return fn(self.data)

@@ -1,61 +1,171 @@
-"""Host-side futurized execution (paper's futurization, where dynamism lives).
+"""Host-side futurized execution (the paper's futurization, where dynamism
+lives).
 
-Phylanx turns user code into a futurized execution tree scheduled by HPX.
-Under XLA the *device* dataflow is compiled ahead of time (see DESIGN.md §2),
-but the host side of a training/serving loop retains real asynchrony: JAX
-dispatch is async, transfers/saves can proceed concurrently, and several
-steps can be kept in flight.  This module gives that a Phylanx-flavoured
-API: ``defer`` builds a DAG of host tasks whose inputs may be device arrays
-(already-async) or other futures; ``Pipeline`` keeps N steps in flight with
-donation, which is how the training loop overlaps data loading, compute and
-checkpoint I/O.
+Phylanx turns user code into a *futurized execution tree* scheduled by HPX:
+every operation becomes a task whose execution is constrained only by the
+resolution of its inputs.  Under XLA the *device* dataflow is compiled ahead
+of time (see DESIGN.md §2), but the host side of a training/serving loop
+retains real asynchrony: JAX dispatch is async, transfers/saves can proceed
+concurrently, and several steps can be kept in flight.  This module is that
+runtime:
+
+  * ``FuturizedGraph.defer`` builds a DAG of host tasks.  Dependencies are
+    discovered by *pytree traversal* of the arguments - any ``PhyFuture``
+    found anywhere inside nested containers becomes an edge.  A task runs
+    when its inputs resolve (constraint-based synchronization); the
+    submitting thread never blocks and never calls ``.result()`` on behalf
+    of a task.
+  * ``when_all`` / ``when_any`` combinators compose futures; ``tree_join``
+    turns a pytree-of-futures into a future-of-pytree (the paper's "tree of
+    futures").
+  * Errors and cancellations propagate along dependency edges to all
+    transitive dependents, so a failed prefetch poisons exactly the steps
+    that consumed it and nothing else.
+  * Ready tasks are drained by priority *lane*: compute dispatch beats
+    prefetch beats checkpoint I/O, so background saves never delay the
+    step-critical path.
+  * ``stats()`` reports tasks run / failed / cancelled, max in-flight, and
+    worker idle time - the observability hook the benchmarks read.
+
+``Pipeline`` (keep N device steps in flight with donation) rides on JAX's
+own async dispatch and is how the training loop bounds its lead over the
+device.  Device arrays pass through ``defer`` untouched: they are already
+futures under JAX's async dispatch.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import enum
+import heapq
+import itertools
 import threading
-from concurrent.futures import Future, ThreadPoolExecutor
-from typing import Any, Callable, Iterable
+import time
+from concurrent.futures import CancelledError
+from typing import Any, Callable, Iterable, Optional, Sequence
 
 import jax
 
+__all__ = [
+    "CancelledError", "FuturizedGraph", "InFlight", "Lane", "PhyFuture",
+    "Pipeline", "RuntimeStats", "TaskState",
+]
+
+
+class Lane(enum.IntEnum):
+    """Priority lanes, highest first.  Ready tasks drain in lane order:
+    step-critical work is never queued behind background I/O.  Note the
+    loop *blocks* on prefetch results, so only work the loop waits on
+    sooner belongs in COMPUTE; metric forcing and step retirement are
+    observability/checkpoint-path work and ride CHECKPOINT."""
+    COMPUTE = 0      # host work on the step-critical path
+    PREFETCH = 1     # next-batch build + host->device transfer
+    CHECKPOINT = 2   # checkpoint I/O, metric forcing, retirement
+
+
+class TaskState(enum.Enum):
+    PENDING = "pending"        # waiting on dependency edges
+    READY = "ready"            # all inputs resolved; queued for a worker
+    RUNNING = "running"
+    DONE = "done"
+    ERROR = "error"
+    CANCELLED = "cancelled"
+
+
+_TERMINAL = (TaskState.DONE, TaskState.ERROR, TaskState.CANCELLED)
+
+
+@dataclasses.dataclass
+class RuntimeStats:
+    """Counters for one ``FuturizedGraph``; read via ``graph.stats()``."""
+    submitted: int = 0
+    completed: int = 0
+    failed: int = 0
+    cancelled: int = 0
+    max_in_flight: int = 0
+    idle_s: float = 0.0        # total worker time spent waiting for work
+    busy_s: float = 0.0        # total worker time spent running tasks
+    per_lane: dict = dataclasses.field(
+        default_factory=lambda: {lane.name: 0 for lane in Lane})
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _is_future(x) -> bool:
+    return isinstance(x, PhyFuture)
+
 
 class PhyFuture:
-    """A future over host work; device arrays pass through untouched
-    (they are already futures under JAX's async dispatch)."""
+    """A node of the futurized execution tree.
 
-    __slots__ = ("_f",)
+    Created by ``FuturizedGraph.defer`` (and the combinators), never
+    directly.  ``result()`` blocks the *caller*; the runtime itself only
+    ever runs a node once every input has resolved.
+    """
 
-    def __init__(self, f: Future):
-        self._f = f
+    __slots__ = ("_graph", "name", "lane", "_fn", "_args", "_kwargs",
+                 "_state", "_value", "_exc", "_ndeps", "_dependents",
+                 "_callbacks", "_seq")
 
-    def result(self):
-        return self._f.result()
+    def __init__(self, graph: "FuturizedGraph", fn: Optional[Callable],
+                 args, kwargs, *, lane: Lane, name: str, seq: int):
+        self._graph = graph
+        self.name = name
+        self.lane = lane
+        self._fn = fn
+        self._args = args
+        self._kwargs = kwargs
+        self._state = TaskState.PENDING
+        self._value = None
+        self._exc: Optional[BaseException] = None
+        self._ndeps = 0
+        self._dependents: list[PhyFuture] = []
+        self._callbacks: list[Callable[["PhyFuture"], None]] = []
+        self._seq = seq
+
+    # -- inspection ---------------------------------------------------------
+    @property
+    def state(self) -> TaskState:
+        return self._state
 
     def done(self) -> bool:
-        return self._f.done()
+        return self._state in _TERMINAL
 
+    def exception(self) -> Optional[BaseException]:
+        """The task's exception, if it errored (blocks until terminal)."""
+        self._graph._wait_terminal(self)
+        return self._exc
 
-class FuturizedGraph:
-    """Tiny futurized execution tree: nodes run when dependencies resolve."""
+    # -- consumption --------------------------------------------------------
+    def result(self, timeout: Optional[float] = None):
+        """Block the caller until resolved; raise the task's exception (or
+        ``CancelledError``) if it did not complete."""
+        self._graph._wait_terminal(self, timeout)
+        if self._state is TaskState.DONE:
+            return self._value
+        if self._state is TaskState.CANCELLED:
+            raise self._exc or CancelledError(self.name)
+        raise self._exc
 
-    def __init__(self, max_workers: int = 4):
-        self._pool = ThreadPoolExecutor(max_workers=max_workers)
+    def cancel(self) -> bool:
+        """Cancel if not yet running; cancellation propagates to all
+        transitive dependents.  Returns False once running/terminal."""
+        return self._graph._cancel(self)
 
-    def defer(self, fn: Callable, *args, **kwargs) -> PhyFuture:
-        def run():
-            a = [x.result() if isinstance(x, PhyFuture) else x for x in args]
-            kw = {k: (v.result() if isinstance(v, PhyFuture) else v)
-                  for k, v in kwargs.items()}
-            return fn(*a, **kw)
-        return PhyFuture(self._pool.submit(run))
+    def add_done_callback(self, cb: Callable[["PhyFuture"], None]):
+        """Run ``cb(self)`` once terminal (immediately if already)."""
+        fire = False
+        with self._graph._lock:
+            if self.done():
+                fire = True
+            else:
+                self._callbacks.append(cb)
+        if fire:
+            cb(self)
 
-    def gather(self, futures: Iterable[PhyFuture]) -> list:
-        return [f.result() for f in futures]
-
-    def shutdown(self):
-        self._pool.shutdown(wait=True)
+    def __repr__(self):
+        return f"<PhyFuture {self.name!r} {self._state.value} lane={self.lane.name}>"
 
 
 @dataclasses.dataclass
@@ -64,13 +174,290 @@ class InFlight:
     outputs: Any
 
 
+class FuturizedGraph:
+    """Futurized execution tree: nodes run when their dependencies resolve,
+    drained by worker threads in priority-lane order."""
+
+    def __init__(self, max_workers: int = 4, name: str = "phyrax"):
+        self.name = name
+        self._lock = threading.RLock()
+        self._cond = threading.Condition(self._lock)   # terminal transitions
+        self._work = threading.Condition(self._lock)   # ready-queue pushes
+        self._heap: list[tuple[int, int, PhyFuture]] = []
+        self._seq = itertools.count()
+        self._unfinished = 0          # nodes not yet terminal
+        self._in_flight = 0           # nodes currently RUNNING
+        self._stats = RuntimeStats()
+        self._closed = False
+        self._workers = [
+            threading.Thread(target=self._worker, daemon=True,
+                             name=f"{name}-futures-{i}")
+            for i in range(max(1, max_workers))]
+        for t in self._workers:
+            t.start()
+
+    # -- task construction --------------------------------------------------
+    def defer(self, fn: Callable, *args, lane: Lane = Lane.COMPUTE,
+              name: str = "", **kwargs) -> PhyFuture:
+        """Add a node running ``fn`` once every ``PhyFuture`` found (by
+        pytree traversal) in ``args``/``kwargs`` has resolved.  Non-future
+        leaves - including device arrays, which are already async under JAX
+        - pass through untouched."""
+        deps = [x for x in jax.tree.leaves((args, kwargs), is_leaf=_is_future)
+                if _is_future(x)]
+        for d in deps:   # validate before touching any graph state
+            if d._graph is not self:
+                raise ValueError("dependency belongs to a different graph")
+        with self._lock:
+            if self._closed:
+                raise RuntimeError(f"graph {self.name!r} is shut down")
+            node = PhyFuture(self, fn, args, kwargs, lane=lane,
+                             name=name or getattr(fn, "__name__", "task"),
+                             seq=next(self._seq))
+            self._stats.submitted += 1
+            self._unfinished += 1
+            poisoned: Optional[PhyFuture] = None
+            for d in deps:
+                if d._state is TaskState.DONE:
+                    continue
+                if d._state in _TERMINAL:      # errored / cancelled upstream
+                    poisoned = d
+                    break
+                d._dependents.append(node)
+                node._ndeps += 1
+            if poisoned is not None:
+                self._fail_locked(node, poisoned._exc
+                                  or CancelledError(poisoned.name),
+                                  cancelled=poisoned._state
+                                  is TaskState.CANCELLED)
+            elif node._ndeps == 0:
+                self._enqueue_locked(node)
+            return node
+
+    def immediate(self, value: Any, name: str = "immediate") -> PhyFuture:
+        """An already-resolved future - wraps a value the caller computed
+        synchronously so downstream nodes can depend on it by edge."""
+        with self._lock:
+            node = PhyFuture(self, None, (), {}, lane=Lane.COMPUTE,
+                             name=name, seq=next(self._seq))
+            node._state = TaskState.DONE
+            node._value = value
+            self._stats.submitted += 1
+            self._stats.completed += 1
+            return node
+
+    # -- combinators --------------------------------------------------------
+    def when_all(self, futures: Sequence[PhyFuture], *,
+                 lane: Lane = Lane.COMPUTE, name: str = "when_all"
+                 ) -> PhyFuture:
+        """Future of the list of results; errors/cancellations propagate."""
+        futures = list(futures)
+        return self.defer(lambda *vs: list(vs), *futures, lane=lane,
+                          name=name)
+
+    def when_any(self, futures: Sequence[PhyFuture], *, name: str = "when_any"
+                 ) -> PhyFuture:
+        """Resolves with ``(index, value)`` of the first future to complete
+        successfully; errors only if *every* input fails or is cancelled."""
+        futures = list(futures)
+        if not futures:
+            raise ValueError("when_any of no futures")
+        with self._lock:
+            node = PhyFuture(self, None, (), {}, lane=Lane.COMPUTE,
+                             name=name, seq=next(self._seq))
+            self._stats.submitted += 1
+            self._unfinished += 1
+        remaining = [len(futures)]
+
+        def on_done(i: int, f: PhyFuture):
+            with self._lock:
+                if node.done():
+                    return
+                if f._state is TaskState.DONE:
+                    self._complete_locked(node, value=(i, f._value))
+                else:
+                    remaining[0] -= 1
+                    if remaining[0] == 0:   # every input failed/cancelled
+                        self._fail_locked(
+                            node, f._exc or CancelledError(f.name),
+                            cancelled=f._state is TaskState.CANCELLED)
+
+        for i, f in enumerate(futures):
+            f.add_done_callback(lambda f, i=i: on_done(i, f))
+        return node
+
+    def tree_join(self, tree: Any, *, lane: Lane = Lane.COMPUTE,
+                  name: str = "tree_join") -> PhyFuture:
+        """Pytree-of-futures -> future-of-pytree (the tree of futures):
+        resolves once every ``PhyFuture`` leaf anywhere in ``tree`` has."""
+        leaves, treedef = jax.tree.flatten(tree, is_leaf=_is_future)
+        futs = [(i, x) for i, x in enumerate(leaves) if _is_future(x)]
+
+        def rebuild(*vals):
+            out = list(leaves)
+            for (i, _), v in zip(futs, vals):
+                out[i] = v
+            return jax.tree.unflatten(treedef, out)
+
+        return self.defer(rebuild, *[f for _, f in futs], lane=lane,
+                          name=name)
+
+    def gather(self, futures: Iterable[PhyFuture]) -> list:
+        """Block the caller for all results (edge of the futurized world)."""
+        return [f.result() for f in futures]
+
+    # -- lifecycle ----------------------------------------------------------
+    def barrier(self, timeout: Optional[float] = None):
+        """Block until every submitted node is terminal."""
+        with self._lock:
+            if not self._cond.wait_for(lambda: self._unfinished == 0,
+                                       timeout):
+                raise TimeoutError(
+                    f"{self._unfinished} tasks still pending")
+
+    def stats(self) -> RuntimeStats:
+        with self._lock:
+            return dataclasses.replace(
+                self._stats, per_lane=dict(self._stats.per_lane))
+
+    def shutdown(self, wait: bool = True, cancel_pending: bool = False):
+        """Drain (or cancel) outstanding work, then stop the workers.
+        With ``wait=True`` every pending node - including low-priority
+        checkpoint I/O - completes before return: the shutdown barrier."""
+        with self._lock:
+            if cancel_pending:
+                for _, _, node in list(self._heap):
+                    self._cancel_locked(node)
+        if wait:
+            self.barrier()
+        with self._lock:
+            self._closed = True
+            self._work.notify_all()
+        for t in self._workers:
+            t.join(timeout=5.0)
+
+    # -- scheduler internals ------------------------------------------------
+    def _enqueue_locked(self, node: PhyFuture):
+        node._state = TaskState.READY
+        heapq.heappush(self._heap, (int(node.lane), node._seq, node))
+        self._work.notify()
+
+    def _worker(self):
+        while True:
+            with self._lock:
+                t0 = time.perf_counter()
+                while not self._heap and not self._closed:
+                    self._work.wait()
+                self._stats.idle_s += time.perf_counter() - t0
+                if not self._heap:          # closed and drained
+                    return
+                _, _, node = heapq.heappop(self._heap)
+                if node._state is not TaskState.READY:  # lazily cancelled
+                    continue
+                node._state = TaskState.RUNNING
+                self._in_flight += 1
+                self._stats.max_in_flight = max(self._stats.max_in_flight,
+                                                self._in_flight)
+                args, kwargs, fn = node._args, node._kwargs, node._fn
+
+            def resolve(x):
+                return x._value if _is_future(x) else x
+
+            t1 = time.perf_counter()
+            try:
+                a, kw = jax.tree.map(resolve, (args, kwargs),
+                                     is_leaf=_is_future)
+                value = fn(*a, **kw)
+            except BaseException as e:  # noqa: BLE001 - propagated to deps
+                with self._lock:
+                    self._stats.busy_s += time.perf_counter() - t1
+                    self._in_flight -= 1
+                    self._fail_locked(node, e)
+            else:
+                with self._lock:
+                    self._stats.busy_s += time.perf_counter() - t1
+                    self._in_flight -= 1
+                    self._complete_locked(node, value=value)
+
+    def _complete_locked(self, node: PhyFuture, *, value: Any):
+        node._state = TaskState.DONE
+        node._value = value
+        node._fn = node._args = node._kwargs = None
+        self._stats.completed += 1
+        self._stats.per_lane[node.lane.name] += 1
+        self._unfinished -= 1
+        for d in node._dependents:
+            if d._state is not TaskState.PENDING:
+                continue
+            d._ndeps -= 1
+            if d._ndeps == 0:
+                self._enqueue_locked(d)
+        self._finish_locked(node)
+
+    def _fail_locked(self, node: PhyFuture, exc: BaseException,
+                     cancelled: bool = False):
+        """Mark ``node`` failed/cancelled and poison all transitive
+        dependents - constraint-based sync also for the error path."""
+        work = [node]
+        while work:
+            n = work.pop()
+            if n._state in _TERMINAL:
+                continue
+            n._state = (TaskState.CANCELLED if cancelled
+                        else TaskState.ERROR)
+            n._exc = exc
+            n._fn = n._args = n._kwargs = None
+            if cancelled:
+                self._stats.cancelled += 1
+            else:
+                self._stats.failed += 1
+            self._unfinished -= 1
+            work.extend(n._dependents)
+            self._finish_locked(n)
+
+    def _finish_locked(self, node: PhyFuture):
+        cbs, node._callbacks = node._callbacks, []
+        deps = node._dependents
+        node._dependents = []
+        del deps
+        self._cond.notify_all()
+        for cb in cbs:
+            try:
+                cb(node)
+            except Exception:   # noqa: BLE001 - callbacks must not kill workers
+                pass
+
+    def _cancel(self, node: PhyFuture) -> bool:
+        with self._lock:
+            return self._cancel_locked(node)
+
+    def _cancel_locked(self, node: PhyFuture) -> bool:
+        if node._state not in (TaskState.PENDING, TaskState.READY):
+            return False
+        self._fail_locked(node, CancelledError(node.name), cancelled=True)
+        return True
+
+    def _wait_terminal(self, node: PhyFuture,
+                       timeout: Optional[float] = None):
+        with self._lock:
+            if not self._cond.wait_for(node.done, timeout):
+                raise TimeoutError(f"task {node.name!r} still "
+                                   f"{node._state.value}")
+
+
 class Pipeline:
     """Keep up to ``depth`` device steps in flight (constraint-based sync:
-    block only when the pipeline is full, never earlier)."""
+    block only when the pipeline is full, never earlier).  This is the
+    device-side complement of ``FuturizedGraph``: XLA programs are already
+    async-dispatched, so the only host obligation is to bound how far the
+    host may run ahead (donation safety + host memory)."""
 
     def __init__(self, depth: int = 2):
         self.depth = depth
         self._q: collections.deque[InFlight] = collections.deque()
+
+    def __len__(self) -> int:
+        return len(self._q)
 
     def push(self, step: int, outputs: Any) -> InFlight | None:
         """Register async outputs of a step; returns the retired step whose

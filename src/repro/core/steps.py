@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from . import fusion, overlap
+from . import compat, fusion, overlap
 from .granularity import GrainPolicy
 from .sharding import (ShardingRules, default_rules, init_params,
                        param_shardings, param_structs, set_act_hook,
@@ -185,7 +185,10 @@ def make_train_step(cfg, mesh, strategy: Strategy, shape: dict) -> TrainStep:
     specs = model.specs()
     rules = default_rules(sequence_parallel=strategy.sequence_parallel)
     p_shard = param_shardings(specs, mesh, rules)
-    axes = dp_axes(mesh)
+    # manual axes of size 1 make every dp collective a no-op; drop them so
+    # the dp=1 case is a plain pjit program (old jax also cannot represent
+    # manual subgroups over size-1 axes)
+    axes = tuple(a for a in dp_axes(mesh) if mesh.shape[a] > 1)
     ndp = dp_degree(mesh)
     structs = param_structs(specs)
     n_tensors = len(jax.tree.leaves(structs))
@@ -227,8 +230,9 @@ def make_train_step(cfg, mesh, strategy: Strategy, shape: dict) -> TrainStep:
                     jax.tree.map(lambda a, b: a + b / k, carry[1], g)), None
         zero_g = jax.tree.map(lambda s: jnp.zeros(s.shape, jnp.float32),
                               structs)
-        (l, g), _ = jax.lax.scan(acc, (jnp.zeros((), jnp.float32), zero_g),
-                                 micro)
+        (l, g), _ = compat.layer_scan(acc,
+                                      (jnp.zeros((), jnp.float32), zero_g),
+                                      micro)
         return l, g
 
     def body(params, opt_state, batch):
@@ -237,6 +241,12 @@ def make_train_step(cfg, mesh, strategy: Strategy, shape: dict) -> TrainStep:
         set_act_hook(mesh, rules.with_overrides(batch=None))
         loss, grads = grads_of(params, batch)
         loss = jax.lax.pmean(loss, axes) if axes else loss
+        if axes and compat.NEEDS_DP_OPERAND_REPLICATION:
+            # old-jax partial-manual workaround: the dp exchange below may
+            # psum tensors still sharded over the auto "model" axis
+            grads = compat.replicate_dp_operands(grads, mesh)
+            if strategy.name == "zero1":
+                params = compat.replicate_dp_operands(params, mesh)
         if strategy.name == "zero1":
             params, opt_state, m = overlap.zero1_update(
                 grads, opt_state, params, oc, axes, scatter_mask)
@@ -268,7 +278,7 @@ def make_train_step(cfg, mesh, strategy: Strategy, shape: dict) -> TrainStep:
         else:
             opt_specs = _opt_skeleton(oc)  # prefix tree of P()
         bspec = _batch_spec(mesh, "batch")
-        fn = jax.shard_map(
+        fn = compat.shard_map(
             body, mesh=mesh,
             in_specs=(P(), opt_specs, bspec),
             out_specs=(P(), P(), opt_specs),

@@ -13,12 +13,12 @@ paper's 4-layer CNN (Fig. 1).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Iterator, Optional
+from typing import Any, Optional
 
 import jax
 import numpy as np
 
-from ..core.futures import FuturizedGraph
+from ..core.futures import FuturizedGraph, Lane
 
 
 @dataclasses.dataclass
@@ -72,14 +72,19 @@ class HARStream:
 
 
 class Prefetcher:
-    """Builds batch step+k on a host thread while step runs on device, then
-    device_puts with the step's shardings (arrives already tiled)."""
+    """Double-buffered prefetch as futurized-graph nodes: batch step+k is
+    built on a worker while step runs on device, then device_put with the
+    step's shardings (arrives already tiled).  Each outstanding batch is a
+    ``Lane.PREFETCH`` node, so on a shared runtime prefetch yields to
+    step-critical compute but beats checkpoint I/O."""
 
     def __init__(self, stream, shardings: Optional[dict] = None,
-                 depth: int = 2):
+                 depth: int = 2, graph: Optional[FuturizedGraph] = None):
         self.stream = stream
         self.shardings = shardings
-        self.graph = FuturizedGraph(max_workers=1)
+        self._own_graph = graph is None
+        self.graph = graph if graph is not None else FuturizedGraph(
+            max_workers=2, name="prefetch")
         self._futs: dict[int, Any] = {}
         self.depth = depth
 
@@ -90,9 +95,25 @@ class Prefetcher:
                  for k, v in b.items()}
         return b
 
-    def get(self, step: int) -> dict:
+    def schedule(self, step: int):
+        """Ensure batches [step, step+depth) are in flight as graph nodes."""
         for s in range(step, step + self.depth):
             if s not in self._futs:
-                self._futs[s] = self.graph.defer(self._make, s)
-        fut = self._futs.pop(step)
-        return fut.result()
+                self._futs[s] = self.graph.defer(
+                    self._make, s, lane=Lane.PREFETCH, name=f"prefetch:{s}")
+
+    def get_future(self, step: int):
+        """The batch's future - lets a consumer depend on it by edge
+        instead of blocking here."""
+        self.schedule(step)
+        return self._futs.pop(step)
+
+    def get(self, step: int) -> dict:
+        return self.get_future(step).result()
+
+    def close(self):
+        for f in self._futs.values():
+            f.cancel()
+        self._futs.clear()
+        if self._own_graph:
+            self.graph.shutdown(wait=True)

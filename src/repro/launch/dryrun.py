@@ -130,6 +130,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         step, lowered, compiled, t_lower, t_compile = lower_cell(
             cfg, mesh, shape_name, strategy)
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):     # old jax: list of per-program dicts
+            ca = ca[0] if ca else {}
         try:
             ma = compiled.memory_analysis()
             mem = {

@@ -1,17 +1,39 @@
 """Mesh construction.  A FUNCTION, not a module-level constant: importing
-this module never touches jax device state."""
+this module never touches jax device state.
+
+Version note: ``jax.sharding.AxisType`` (and the ``axis_types=`` kwarg of
+``jax.make_mesh``) only exist in newer jax releases.  All axes here are
+Auto-typed, which is also the default, so on older jax we simply build the
+mesh without the kwarg - same semantics either way.
+"""
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5-ish
+    from jax.sharding import AxisType as _AxisType
+except ImportError:  # jax 0.4.x
+    _AxisType = None
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    if _AxisType is not None:
+        try:
+            return jax.make_mesh(shape, axes,
+                                 axis_types=(_AxisType.Auto,) * len(axes))
+        except TypeError:  # AxisType exists but make_mesh predates the kwarg
+            pass
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(shape, axes)
+    from jax.experimental import mesh_utils  # very old jax
+    return jax.sharding.Mesh(mesh_utils.create_device_mesh(shape), axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips when multi_pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh(data: int = 1, model: int = 1, pod: int = 1):
@@ -21,8 +43,7 @@ def make_local_mesh(data: int = 1, model: int = 1, pod: int = 1):
         if n > 1 or a in ("data", "model"):
             shape.append(n)
             axes.append(a)
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(tuple(shape), tuple(axes))
 
 
 def mesh_devices(mesh) -> int:

@@ -24,13 +24,11 @@ import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
 from repro.core import steps as steps_lib
-from repro.core.futures import Pipeline
-from repro.core.resilience import ResilientRunner, StragglerPolicy, finite_check
+from repro.core.futures import FuturizedGraph, Lane, Pipeline
+from repro.core.resilience import ResilientRunner, StragglerPolicy
 from repro.checkpoint.checkpoint import CheckpointManager
 from repro.data.pipeline import LMStream, Prefetcher
 from repro.launch.mesh import make_local_mesh
@@ -58,7 +56,13 @@ def run(args) -> dict:
     params, opt = step.init(jax.random.PRNGKey(args.seed))
     start = 0
 
-    ckpt = CheckpointManager(args.ckpt, keep=3) if args.ckpt else None
+    # One futurized runtime for every host-side task in the loop: prefetch
+    # nodes (Lane.PREFETCH), metric forcing (Lane.COMPUTE) and checkpoint
+    # I/O (Lane.CHECKPOINT) share its workers; the lane order keeps saves
+    # off the step-critical path.
+    runtime = FuturizedGraph(max_workers=4, name="train")
+    ckpt = (CheckpointManager(args.ckpt, keep=3, graph=runtime)
+            if args.ckpt else None)
     if ckpt is not None and args.resume:
         latest = ckpt.latest_step()
         if latest is not None:
@@ -67,43 +71,79 @@ def run(args) -> dict:
                 shardings=(step.param_shardings, step.opt_shardings))
             print(f"[train] resumed from step {start}")
 
-    prefetch = Prefetcher(stream, step.batch_shardings)
+    prefetch = Prefetcher(stream, step.batch_shardings, graph=runtime)
     runner = ResilientRunner(step.fn_nodonate)
     policy = StragglerPolicy(accumulate_local_steps=1)
     inflight = Pipeline(depth=2)
-    losses = []
-    t0 = time.time()
-    for it in range(start, args.steps):
-        batch = prefetch.get(it)
-        if args.fail_at_step is not None and it == args.fail_at_step \
-                and not args.resume:
-            raise RuntimeError(f"injected node failure at step {it}")
-        if args.resilience == "replay":
-            metrics, params, opt = runner.replay(params, opt, batch)
-        elif args.resilience == "replicate":
-            metrics, params, opt = runner.replicate(params, opt, batch, n=2)
-        else:
-            metrics, params, opt = step.fn(params, opt, batch)
-        inflight.push(it, metrics)
-        if (it + 1) % args.log_every == 0:
-            loss = float(metrics["loss"])
-            losses.append(loss)
-            dt = (time.time() - t0) / args.log_every
-            print(f"[train] step {it + 1:5d} loss {loss:8.4f} "
-                  f"gnorm {float(metrics['grad_norm']):8.3f} "
-                  f"{dt * 1e3:8.1f} ms/step", flush=True)
-            t0 = time.time()
-        if ckpt is not None and (it + 1) % args.ckpt_every == 0:
-            ckpt.save(it + 1, (params, opt),
-                      meta={"arch": args.arch, "loss": float(metrics["loss"])})
-    inflight.drain()
-    if ckpt is not None:
-        ckpt.save(args.steps, (params, opt), meta={"arch": args.arch})
-        ckpt.wait()
+    log_futs: list = []
+    t_log = time.time()
+
+    def _force_and_log(it, m, t_start):
+        # Runs on a runtime worker: forcing metrics never stalls dispatch.
+        loss = float(m["loss"])
+        dt = (time.time() - t_start) / args.log_every
+        print(f"[train] step {it + 1:5d} loss {loss:8.4f} "
+              f"gnorm {float(m['grad_norm']):8.3f} "
+              f"{dt * 1e3:8.1f} ms/step", flush=True)
+        return loss
+
+    metrics = None
+    try:
+        for it in range(start, args.steps):
+            batch = prefetch.get(it)
+            if args.fail_at_step is not None and it == args.fail_at_step \
+                    and not args.resume:
+                raise RuntimeError(f"injected node failure at step {it}")
+            if args.resilience == "replay":
+                metrics, params, opt = runner.replay(params, opt, batch)
+            elif args.resilience == "replicate":
+                metrics, params, opt = runner.replicate(params, opt, batch,
+                                                        n=2)
+            else:
+                metrics, params, opt = step.fn(params, opt, batch)
+            inflight.push(it, metrics)
+            if (it + 1) % args.log_every == 0:
+                # CHECKPOINT lane: forcing metrics for logs must never
+                # outrank the PREFETCH nodes the loop blocks on next
+                log_futs.append(runtime.defer(
+                    _force_and_log, it, metrics, t_log,
+                    lane=Lane.CHECKPOINT, name=f"log:{it}"))
+                t_log = time.time()
+            if ckpt is not None and (it + 1) % args.ckpt_every == 0:
+                # The write node depends on step retirement: file I/O starts
+                # only after the step's outputs are resolved on device.
+                retired = runtime.defer(jax.block_until_ready, metrics,
+                                        lane=Lane.CHECKPOINT,
+                                        name=f"retire:{it}")
+                ckpt.save(it + 1, (params, opt), deps=(retired,),
+                          meta={"arch": args.arch})
+        inflight.drain()
+        if ckpt is not None:
+            ckpt.save(args.steps, (params, opt), meta={"arch": args.arch})
+    finally:
+        # Shutdown barrier - also on the injected-failure path, so a crash
+        # never loses a save that was already requested: retire in-flight
+        # steps, land every pending checkpoint node, stop the workers.
+        inflight.drain()
+        prefetch.close()       # cancel batches nobody will consume
+        if ckpt is not None:
+            ckpt.close()
+        runtime.shutdown(wait=True)
+
+    losses = [f.result() for f in log_futs]
+    st = runtime.stats()
+    if metrics is None:      # resumed at/after --steps: nothing left to run
+        print(f"[train] nothing to do: resumed at step {start} "
+              f">= --steps {args.steps}")
+        return {"final_loss": float("nan"), "losses": losses,
+                "params": params, "step": start,
+                "runtime_stats": st.to_json()}
     final = float(metrics["loss"])
-    print(f"[train] done: final loss {final:.4f}")
+    print(f"[train] done: final loss {final:.4f} "
+          f"(host tasks {st.completed}, max in-flight {st.max_in_flight})")
     return {"final_loss": final, "losses": losses,
-            "params": params, "step": args.steps}
+            "params": params, "step": args.steps,
+            "runtime_stats": st.to_json()}
 
 
 def parser() -> argparse.ArgumentParser:

@@ -14,14 +14,22 @@ from ..core.sharding import ParamSpec
 def har_cnn_specs(*, in_ch: int = 9, width: int = 64, classes: int = 6,
                   kernel: int = 3) -> dict:
     c = width
+    # gain 1.5 on the conv stack: four VALID relu convs + maxpool + global
+    # average pooling attenuate the signal enough that unit-gain init leaves
+    # gradients too small to train at the paper's SGD settings
+    g = 1.5
     return {
-        "conv1": {"w": ParamSpec((kernel, in_ch, c), ("conv", None, "channels")),
+        "conv1": {"w": ParamSpec((kernel, in_ch, c), ("conv", None, "channels"),
+                                 scale=g),
                   "b": ParamSpec((c,), ("channels",), init="zeros")},
-        "conv2": {"w": ParamSpec((kernel, c, c), ("conv", None, "channels")),
+        "conv2": {"w": ParamSpec((kernel, c, c), ("conv", None, "channels"),
+                                 scale=g),
                   "b": ParamSpec((c,), ("channels",), init="zeros")},
-        "conv3": {"w": ParamSpec((kernel, c, 2 * c), ("conv", None, "channels")),
+        "conv3": {"w": ParamSpec((kernel, c, 2 * c), ("conv", None, "channels"),
+                                 scale=g),
                   "b": ParamSpec((2 * c,), ("channels",), init="zeros")},
-        "conv4": {"w": ParamSpec((kernel, 2 * c, 2 * c), ("conv", None, "channels")),
+        "conv4": {"w": ParamSpec((kernel, 2 * c, 2 * c), ("conv", None, "channels"),
+                                 scale=g),
                   "b": ParamSpec((2 * c,), ("channels",), init="zeros")},
         "head": {"w": ParamSpec((2 * c, classes), (None, None)),
                  "b": ParamSpec((classes,), (None,), init="zeros")},

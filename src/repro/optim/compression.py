@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from ..core import fusion
+from ..core import compat, fusion
 
 ROW = 1024  # bucket rows are reshaped to [R, ROW] for per-row scales
 
@@ -76,13 +76,13 @@ def exchange_onebit(grads, err_state, dp_axes, plan):
     axes = tuple(dp_axes)
     ndp = 1
     for a in axes:
-        ndp *= lax.axis_size(a)
+        ndp *= compat.axis_size(a)
     bufs = fusion.pack(grads, plan)
     out_bufs, new_err = [], []
     for buf, err in zip(bufs, err_state):
         packed, scale, err2 = quantize_bucket(buf, err)
-        all_packed = lax.all_gather(packed, axes)          # [ndp, R, C/32]
-        all_scale = lax.all_gather(scale, axes)            # [ndp, R, 1]
+        all_packed = compat.all_gather(packed, axes, tiled=False)  # [ndp, R, C/32]
+        all_scale = compat.all_gather(scale, axes, tiled=False)    # [ndp, R, 1]
         signs = unpack_bits(all_packed.reshape(-1, packed.shape[-1]))
         signs = signs.reshape((ndp,) + packed.shape[:1] + (-1,))
         deq = jnp.where(signs, all_scale, -all_scale)      # [ndp, R, ROW]

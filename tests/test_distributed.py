@@ -12,8 +12,8 @@ def test_fused_equals_naive_equals_ring_allreduce():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from repro.core import collectives, fusion
-        mesh = jax.make_mesh((8,), ('data',),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((8,), ('data',))
         tree = {'a': jnp.arange(32, dtype=jnp.float32).reshape(4, 8),
                 'b': jnp.ones((3, 5)) * 2}
 
@@ -24,7 +24,8 @@ def test_fused_equals_naive_equals_ring_allreduce():
                 lambda x: collectives.ring_all_reduce(x, 'data'), t)
             return naive, fused, ring
 
-        f = jax.shard_map(body, mesh=mesh, in_specs=P(),
+        from repro.core.compat import shard_map
+        f = shard_map(body, mesh=mesh, in_specs=P(),
                           out_specs=P(), check_vma=False)
         n, fu, r = f(tree)
         for k in tree:
@@ -44,15 +45,16 @@ def test_halo_exchange_matches_manual_shift():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P, NamedSharding
         from repro.core import collectives
-        mesh = jax.make_mesh((4,), ('data',),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((4,), ('data',))
         x = jnp.arange(16.0).reshape(16, 1)
         xs = jax.device_put(x, NamedSharding(mesh, P('data')))
 
         def body(t):
             return collectives.halo_exchange(t, 'data', 1, dim=0)
 
-        f = jax.shard_map(body, mesh=mesh, in_specs=P('data'),
+        from repro.core.compat import shard_map
+        f = shard_map(body, mesh=mesh, in_specs=P('data'),
                           out_specs=P('data'), check_vma=False)
         out = np.asarray(f(xs))          # [4 shards x 6 rows, 1]
         out = out.reshape(4, 6)
@@ -70,8 +72,8 @@ def test_flash_decode_combine_matches_full_softmax():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P, NamedSharding
         from repro.core import collectives
-        mesh = jax.make_mesh((4,), ('data',),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((4,), ('data',))
         S, d = 64, 8
         key = jax.random.PRNGKey(0)
         lg = jax.random.normal(key, (S,))
@@ -84,7 +86,8 @@ def test_flash_decode_combine_matches_full_softmax():
             o = jnp.exp(lg_l - m) @ v_l
             return collectives.softmax_combine((m, l, o), 'data')
 
-        f = jax.shard_map(body, mesh=mesh, in_specs=(P('data'), P('data')),
+        from repro.core.compat import shard_map
+        f = shard_map(body, mesh=mesh, in_specs=(P('data'), P('data')),
                           out_specs=P(), check_vma=False)
         got = f(jax.device_put(lg, NamedSharding(mesh, P('data'))),
                 jax.device_put(v, NamedSharding(mesh, P('data'))))
@@ -201,8 +204,8 @@ def test_gpipe_pipeline_matches_sequential_and_trains():
         from jax.sharding import PartitionSpec as P, NamedSharding
         from repro.core import pipeline
         S, M, mb, d = 4, 8, 2, 16
-        mesh = jax.make_mesh((S,), ('stage',),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((S,), ('stage',))
         key = jax.random.PRNGKey(0)
         Ws = jax.random.normal(key, (S, d, d)) * (1.0 / d ** 0.5)
 

@@ -1,0 +1,286 @@
+"""The futurized execution runtime: dependency ordering, combinators,
+error/cancellation propagation along edges, pytree traversal, priority
+lanes, runtime stats, Pipeline depth/drain, shutdown barriers."""
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.futures import (CancelledError, FuturizedGraph, Lane,
+                                Pipeline, TaskState)
+
+
+@pytest.fixture()
+def graph():
+    g = FuturizedGraph(max_workers=2, name="test")
+    yield g
+    g.shutdown(wait=False, cancel_pending=True)
+
+
+# -- dependency-tracked execution -------------------------------------------
+
+def test_chain_executes_in_dependency_order_without_caller_forcing(graph):
+    """A >=3-task chain runs in edge order; the submitting thread never
+    calls .result() until the whole tree is built."""
+    order = []
+
+    def tag(name, value):
+        order.append(name)
+        return value
+
+    a = graph.defer(tag, "a", 2, name="a")
+    b = graph.defer(lambda x: tag("b", x * 3), a, name="b")
+    c = graph.defer(lambda x, y: tag("c", x + y), a, b, name="c")
+    # only now does the caller touch a result - of the *root* only
+    assert c.result() == 8
+    assert order == ["a", "b", "c"]
+    assert a.state is TaskState.DONE and b.state is TaskState.DONE
+
+
+def test_diamond_runs_join_after_both_branches(graph):
+    gate = threading.Event()
+    src = graph.defer(lambda: (gate.wait(2), 1)[1], name="src")
+    left = graph.defer(lambda x: x + 10, src, name="left")
+    right = graph.defer(lambda x: x + 100, src, name="right")
+    join = graph.defer(lambda l, r: l + r, left, right, name="join")
+    assert not join.done()           # src still gated: nothing downstream ran
+    gate.set()
+    assert join.result() == 112
+
+
+def test_defer_never_blocks_submitter(graph):
+    gate = threading.Event()
+    t0 = time.perf_counter()
+    f = graph.defer(gate.wait, 5, name="slow")
+    g2 = graph.defer(lambda x: x, f, name="dependent")
+    assert time.perf_counter() - t0 < 0.5     # both submissions returned fast
+    assert not g2.done()
+    gate.set()
+    assert g2.result() is True
+
+
+def test_kwarg_and_nested_container_futures_become_edges(graph):
+    a = graph.defer(lambda: 5, name="a")
+    b = graph.defer(lambda xs, y=None: xs["k"][0] + y, {"k": [a]}, y=a,
+                    name="b")
+    assert b.result() == 10
+
+
+# -- combinators -------------------------------------------------------------
+
+def test_when_all_collects_in_order(graph):
+    futs = [graph.defer(lambda i=i: i * i, name=f"s{i}") for i in range(6)]
+    assert graph.when_all(futs).result() == [0, 1, 4, 9, 16, 25]
+
+
+def test_when_any_returns_first_success(graph):
+    slow_gate = threading.Event()
+    slow = graph.defer(slow_gate.wait, 5, name="slow")
+    fast = graph.defer(lambda: "fast", name="fast")
+    i, v = graph.when_any([slow, fast]).result()
+    assert (i, v) == (1, "fast")
+    slow_gate.set()
+
+
+def test_when_any_errors_only_if_all_fail(graph):
+    f1 = graph.defer(lambda: 1 / 0, name="f1")
+    f2 = graph.defer(lambda: None.x, name="f2")
+    any_fut = graph.when_any([f1, f2])
+    with pytest.raises((ZeroDivisionError, AttributeError)):
+        any_fut.result()
+
+
+def test_tree_join_resolves_pytree_of_futures(graph):
+    a = graph.defer(lambda: jnp.ones(3), name="a")
+    b = graph.defer(lambda: 7, name="b")
+    tree = {"x": a, "y": [b, "static"], "z": 1.5}
+    out = graph.tree_join(tree).result()
+    np.testing.assert_array_equal(np.asarray(out["x"]), np.ones(3))
+    assert out["y"] == [7, "static"] and out["z"] == 1.5
+
+
+# -- error & cancellation propagation ---------------------------------------
+
+def test_error_propagates_to_all_transitive_dependents(graph):
+    boom = ValueError("injected")
+
+    def explode():
+        raise boom
+
+    a = graph.defer(explode, name="a")
+    b = graph.defer(lambda x: x + 1, a, name="b")
+    c = graph.defer(lambda x: x + 1, b, name="c")       # transitive
+    d = graph.defer(lambda x, y: x + y, a, c, name="d")  # multi-edge
+    for f in (b, c, d):
+        with pytest.raises(ValueError, match="injected"):
+            f.result()
+        assert f.state is TaskState.ERROR
+    assert graph.stats().failed == 4
+
+
+def test_error_does_not_poison_unrelated_tasks(graph):
+    bad = graph.defer(lambda: 1 / 0, name="bad")
+    good = graph.defer(lambda: 3, name="good")
+    assert good.result() == 3
+    with pytest.raises(ZeroDivisionError):
+        bad.result()
+
+
+def test_defer_on_already_failed_dep_fails_immediately(graph):
+    bad = graph.defer(lambda: 1 / 0, name="bad")
+    with pytest.raises(ZeroDivisionError):
+        bad.result()
+    late = graph.defer(lambda x: x, bad, name="late")
+    with pytest.raises(ZeroDivisionError):
+        late.result()
+
+
+def test_cancel_propagates_to_dependents(graph):
+    gate = threading.Event()
+    src = graph.defer(gate.wait, 5, name="src")
+    pend = graph.defer(lambda x: x, src, name="pend")      # PENDING on src
+    leaf = graph.defer(lambda x: x, pend, name="leaf")
+    assert pend.cancel() is True
+    assert pend.state is TaskState.CANCELLED
+    assert leaf.state is TaskState.CANCELLED
+    with pytest.raises(CancelledError):
+        leaf.result()
+    gate.set()
+    assert src.result() is True          # upstream unaffected by the cancel
+    assert graph.stats().cancelled == 2
+
+
+def test_cancel_running_task_returns_false(graph):
+    started, gate = threading.Event(), threading.Event()
+
+    def body():
+        started.set()
+        gate.wait(5)
+        return "done"
+
+    f = graph.defer(body, name="running")
+    started.wait(2)
+    assert f.cancel() is False
+    gate.set()
+    assert f.result() == "done"
+
+
+# -- priority lanes & stats --------------------------------------------------
+
+def test_lanes_drain_compute_before_checkpoint():
+    g = FuturizedGraph(max_workers=1, name="lanes")
+    try:
+        hold = threading.Event()
+        order = []
+        g.defer(hold.wait, 5, name="blocker")
+        # enqueued while the single worker is held, in "wrong" order:
+        g.defer(lambda: order.append("ckpt"), lane=Lane.CHECKPOINT,
+                name="ckpt")
+        g.defer(lambda: order.append("prefetch"), lane=Lane.PREFETCH,
+                name="pf")
+        g.defer(lambda: order.append("compute"), lane=Lane.COMPUTE,
+                name="comp")
+        hold.set()
+        g.barrier(timeout=10)
+        assert order == ["compute", "prefetch", "ckpt"]
+    finally:
+        g.shutdown(wait=True)
+
+
+def test_stats_counts_and_max_in_flight(graph):
+    futs = [graph.defer(time.sleep, 0.02, name=f"t{i}") for i in range(6)]
+    graph.gather(futs)
+    st = graph.stats()
+    assert st.submitted >= 6 and st.completed >= 6
+    assert 1 <= st.max_in_flight <= 2          # 2 workers
+    assert st.per_lane["COMPUTE"] >= 6
+    assert st.idle_s >= 0.0 and st.busy_s > 0.0
+
+
+def test_immediate_future_is_resolved_edge(graph):
+    imm = graph.immediate({"v": 1})
+    assert imm.done()
+    out = graph.defer(lambda d: d["v"] + 1, imm, name="use")
+    assert out.result() == 2
+
+
+# -- Pipeline (in-flight device steps) --------------------------------------
+
+def test_pipeline_keeps_depth_in_flight_and_drains_in_order():
+    p = Pipeline(depth=2)
+    retired = []
+    for i in range(5):
+        r = p.push(i, jnp.ones(2) * i)
+        if r is not None:
+            retired.append(r.step)
+    assert retired == [0, 1, 2] and len(p) == 2
+    rest = p.drain()
+    assert [r.step for r in rest] == [3, 4] and len(p) == 0
+
+
+# -- shutdown barriers -------------------------------------------------------
+
+def test_shutdown_waits_for_pending_checkpoint_nodes(tmp_path):
+    from repro.checkpoint.checkpoint import CheckpointManager
+    g = FuturizedGraph(max_workers=2, name="ckpt-shutdown")
+    release = threading.Event()
+    ckpt = CheckpointManager(tmp_path, graph=g)
+    tree = {"w": np.arange(8.0)}
+    # the save's write node depends on a still-pending retirement edge
+    retired = g.defer(release.wait, 5, name="retire")
+    ckpt.save(7, tree, deps=(retired,))
+    assert ckpt.all_steps() == []            # nothing on disk yet
+    release.set()
+    g.shutdown(wait=True)                    # barrier drains checkpoint lane
+    assert ckpt.all_steps() == [7]
+    step, back = ckpt.restore(tree)
+    assert step == 7
+    np.testing.assert_array_equal(back["w"], tree["w"])
+
+
+def test_checkpoint_save_failure_surfaces_on_next_save(tmp_path):
+    from repro.checkpoint.checkpoint import CheckpointManager
+    g = FuturizedGraph(max_workers=2, name="ckpt-fail")
+    try:
+        ckpt = CheckpointManager(tmp_path, graph=g)
+        boom = g.defer(lambda: 1 / 0, name="dep")   # poisons the write node
+        ckpt.save(1, {"w": np.ones(4)}, deps=(boom,))
+        g.barrier(timeout=10)
+        with pytest.raises(ZeroDivisionError):      # fail fast, not at close
+            ckpt.save(2, {"w": np.ones(4)})
+        assert ckpt.all_steps() == []
+    finally:
+        g.shutdown(wait=True)
+
+
+def test_defer_cross_graph_dep_rejected_without_corrupting_graph():
+    g1 = FuturizedGraph(max_workers=1, name="g1")
+    g2 = FuturizedGraph(max_workers=1, name="g2")
+    try:
+        local = g1.defer(lambda: 1, name="local")
+        foreign = g2.defer(lambda: 2, name="foreign")
+        with pytest.raises(ValueError, match="different graph"):
+            g1.defer(lambda a, b: a + b, local, foreign, name="bad")
+        g1.barrier(timeout=10)          # must not hang on a phantom node
+        assert g1.defer(lambda x: x + 1, local, name="ok").result() == 2
+    finally:
+        g1.shutdown(wait=True)
+        g2.shutdown(wait=True)
+
+
+def test_defer_after_shutdown_raises():
+    g = FuturizedGraph(max_workers=1, name="closed")
+    g.shutdown(wait=True)
+    with pytest.raises(RuntimeError, match="shut down"):
+        g.defer(lambda: 1)
+
+
+def test_barrier_timeout_raises(graph):
+    gate = threading.Event()
+    graph.defer(gate.wait, 5, name="held")
+    with pytest.raises(TimeoutError):
+        graph.barrier(timeout=0.05)
+    gate.set()
+    graph.barrier(timeout=10)

@@ -69,8 +69,8 @@ def test_collectives_inside_scan_are_multiplied():
         import jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
         from repro.core import hlo_costs
-        mesh = jax.make_mesh((4,), ('d',),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((4,), ('d',))
 
         def body(x):
             def step(c, _):
@@ -78,7 +78,8 @@ def test_collectives_inside_scan_are_multiplied():
             y, _ = jax.lax.scan(step, x, None, length=7)
             return y
 
-        f = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P(),
+        from repro.core.compat import shard_map
+        f = jax.jit(shard_map(body, mesh=mesh, in_specs=P(),
                                   out_specs=P(), check_vma=False))
         co = f.lower(jax.ShapeDtypeStruct((128, 128), jnp.float32)).compile()
         c = hlo_costs.analyze(co.as_text(), 4)
