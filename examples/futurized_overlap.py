@@ -1,7 +1,9 @@
 """The futurized execution tree, end to end on one CPU device.
 
-Walks the ``core.futures`` API the way the launchers use it:
+Walks the frontend and the ``core.futures`` API underneath it:
 
+  0. ``@futurize``: plain Python traced into the tree - calls become nodes,
+     control flow stays in Python, untraced calls run inline
   1. a small dependency DAG (``defer`` discovers edges by pytree traversal)
   2. combinators: ``when_all`` / ``when_any`` / ``tree_join``
   3. error propagation along edges (a poisoned branch, an intact one)
@@ -20,9 +22,33 @@ import jax.numpy as jnp
 from repro.checkpoint.checkpoint import CheckpointManager
 from repro.core.futures import FuturizedGraph, Pipeline
 from repro.data.pipeline import LMStream, Prefetcher
+from repro.frontend import futurize, tracing
+
+
+@futurize
+def load(i):
+    return i * 2
+
+
+@futurize
+def grad(x):
+    return x + 1
+
+
+@futurize
+def apply_update(*grads):
+    return sum(grads)
 
 
 def main():
+    # 0. the decorator view: a plain-Python "step loop" becomes a futurized
+    #    tree; outside tracing() the same calls run inline.
+    assert load(3) == 6                     # untraced fallback: inline
+    with tracing(max_workers=2, name="traced-demo") as tr:
+        total = apply_update(*[grad(load(i)) for i in range(3)])
+        print("futurize :", total.result(), "<- tree",
+              [n.name for n in tr.nodes])
+
     g = FuturizedGraph(max_workers=4, name="demo")
 
     # 1. constraint-based sync: c runs only once a and b resolved - the

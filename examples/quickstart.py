@@ -1,57 +1,42 @@
-"""Quickstart: build an architecture from the registry, train it on the
-synthetic bigram stream, then serve a few greedy tokens - all through the
-public API, all on one CPU device.
+"""Quickstart: declare a Plan, compile it to a Session, train on the
+synthetic bigram stream, then serve greedy tokens - the whole frontend API
+on one CPU device, no launcher involved.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax
-import jax.numpy as jnp
-
-from repro.configs import get_config
-from repro.core import steps as steps_lib
-from repro.data.pipeline import LMStream
-from repro.launch.mesh import make_local_mesh
+from repro.core.steps import Strategy
+from repro.frontend import Plan
 from repro.optim.optimizers import OptConfig
 
 
 def main():
-    # 1. pick an architecture (any of the 10 registry ids) at smoke scale
-    cfg = get_config("qwen3-4b", tiny=True)
+    # 1. a Plan is the declarative run description: arch (any of the 10
+    #    registry ids) + mesh axes + strategy + shapes
+    plan = Plan(arch="qwen3-4b", tiny=True, data=1, model=1,
+                batch=8, seq=64,
+                strategy=Strategy(name="phylanx",   # fused async collectives
+                                  opt=OptConfig(lr=1e-3)))
+    cfg = plan.config()
     print(f"arch={cfg.name} family={cfg.family} "
           f"params~{cfg.n_params()[0] / 1e6:.1f}M (tiny)")
 
-    # 2. a mesh + a strategy = a distributed training step
-    mesh = make_local_mesh()                       # 1 device here; same code
-    strategy = steps_lib.Strategy(name="phylanx",  # fused async collectives
-                                  opt=OptConfig(lr=1e-3))
-    shape = {"seq_len": 64, "global_batch": 8, "kind": "train"}
-    step = steps_lib.make_train_step(cfg, mesh, strategy, shape)
+    # 2. compile() builds the Session: mesh + jitted steps + one futurized
+    #    runtime for every host-side task (prefetch, logging, checkpoints)
+    with plan.compile() as session:
+        # 3. train on the default synthetic stream for this architecture
+        out = session.train(steps=30, log_every=5)
+        print(f"trained: final loss {out['final_loss']:.4f}")
 
-    # 3. train on the synthetic stream
-    stream = LMStream(vocab=64, batch=8, seq=64, seed=0)
-    params, opt = step.init(jax.random.PRNGKey(0))
-    for it in range(30):
-        metrics, params, opt = step.fn(params, opt, stream.batch_at(it))
-        if (it + 1) % 5 == 0:
-            print(f"step {it + 1:3d}  loss {float(metrics['loss']):.4f}")
-
-    # 4. serve: prefill a prompt, decode greedily with the KV cache
-    model = step.model
-    prompt = stream.batch_at(999)["tokens"][:1, :16]
-    logits, cache = model.prefill(params, {"tokens": prompt}, 32)
-    toks = [int(jnp.argmax(logits[0]))]
-    cur = jnp.array([[toks[-1]]], jnp.int32)
-    for t in range(8):
-        logits, cache = model.decode_step(params, cache, {"tokens": cur},
-                                          jnp.int32(16 + t))
-        toks.append(int(jnp.argmax(logits[0])))
-        cur = jnp.array([[toks[-1]]], jnp.int32)
-    print("prompt tail :", list(map(int, prompt[0, -6:])))
-    print("generated   :", toks)
-    want = [(31 * prompt[0, -1].item() + 7) % 64]
-    for _ in range(8):
-        want.append((31 * want[-1] + 7) % 64)
-    print("bigram rule :", want, " (model should start matching this)")
+        # 4. serve through the same session: each wave is a futurized tree
+        #    of one prefill node + chained, *named* decode nodes
+        served = session.serve(requests=4, slots=2, prompt_len=16,
+                               gen_len=8)
+        decode_nodes = [n for n in served["nodes"]
+                        if n.startswith("decode:")]
+        print(f"served : {served['tokens']} tokens at "
+              f"{served['tokens_per_s']:.1f} tok/s")
+        print(f"decode graph nodes: {decode_nodes[:4]} ... "
+              f"({len(decode_nodes)} total)")
 
 
 if __name__ == "__main__":

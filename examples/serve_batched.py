@@ -1,4 +1,6 @@
-"""Batched serving with continuous slot refill on a (data=2, model=2) mesh.
+"""Batched serving with continuous slot refill on a (data=2, model=2) mesh,
+through Plan/Session: every wave runs as a futurized tree of one prefill
+node plus chained, named decode nodes.
 
     PYTHONPATH=src python examples/serve_batched.py
 """
@@ -6,17 +8,17 @@ import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
 
-import sys  # noqa: E402
-
-from repro.launch import serve as serve_mod  # noqa: E402
+from repro.frontend import Plan  # noqa: E402
 
 
 def main():
-    args = serve_mod.parser().parse_args(
-        ["--arch", "qwen3-4b", "--requests", "12", "--slots", "4",
-         "--prompt-len", "32", "--gen-len", "16", "--data", "2",
-         "--model", "2"] + sys.argv[1:])
-    serve_mod.run(args)
+    plan = Plan(arch="qwen3-4b", tiny=True, data=2, model=2)
+    with plan.compile() as session:
+        out = session.serve(requests=12, slots=4, prompt_len=32, gen_len=16)
+        waves = {n.split(":")[1] for n in out["nodes"]
+                 if n.startswith("decode:")}
+        print(f"{len(waves)} waves of decode graph nodes, "
+              f"{out['tokens_per_s']:.1f} tok/s")
 
 
 if __name__ == "__main__":

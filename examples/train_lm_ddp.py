@@ -1,13 +1,13 @@
-"""End-to-end distributed training driver (deliverable b):
+"""End-to-end distributed training through Plan/Session:
 
   * 8 host devices as a (data=4, model=2) mesh
   * paper-faithful "phylanx" strategy (fused bucketed async collectives)
-  * async checkpointing every 25 steps
+  * async checkpointing every ~steps/5 steps
   * an injected node failure mid-run, then automatic restart from the
-    latest checkpoint (the fault-tolerance drill)
+    latest checkpoint ON THE SAME SESSION (the fault-tolerance drill)
 
-Scale knobs: --full trains the real config (needs a real cluster); the
-default trains the reduced config for a few hundred steps on CPU.
+Scale knobs: larger --steps trains longer; the default trains the reduced
+config on CPU.
 
     PYTHONPATH=src python examples/train_lm_ddp.py [--steps 200]
 """
@@ -18,7 +18,8 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import argparse  # noqa: E402
 import sys  # noqa: E402
 
-from repro.launch import train as train_mod  # noqa: E402
+from repro.core.steps import Strategy  # noqa: E402
+from repro.frontend import Plan  # noqa: E402
 
 
 def main(argv=None):
@@ -29,22 +30,21 @@ def main(argv=None):
     args, _ = ap.parse_known_args(argv)
 
     every = max(5, args.steps // 5)   # checkpoints exist before the failure
-    base = ["--arch", args.arch, "--steps", str(args.steps),
-            "--batch", "16", "--seq", "64", "--data", "4", "--model", "2",
-            "--strategy", "phylanx", "--ckpt", args.ckpt,
-            "--ckpt-every", str(every), "--log-every", "10"]
+    plan = Plan(arch=args.arch, tiny=True, data=4, model=2,
+                batch=16, seq=64, strategy=Strategy(name="phylanx"))
+    with plan.compile() as session:
+        print("=== phase 1: train until an injected node failure ===")
+        try:
+            session.train(steps=args.steps, ckpt_dir=args.ckpt,
+                          ckpt_every=every, log_every=10,
+                          fail_at_step=args.steps // 2)
+        except RuntimeError as e:
+            print(f"!! {e}")
 
-    print("=== phase 1: train until an injected node failure ===")
-    half = args.steps // 2
-    try:
-        train_mod.run(train_mod.parser().parse_args(
-            base + ["--fail-at-step", str(half)]))
-    except RuntimeError as e:
-        print(f"!! {e}")
-
-    print("=== phase 2: restart from the latest checkpoint ===")
-    out = train_mod.run(train_mod.parser().parse_args(base + ["--resume"]))
-    print(f"recovered and finished: final loss {out['final_loss']:.4f}")
+        print("=== phase 2: restart from the latest checkpoint ===")
+        out = session.train(steps=args.steps, ckpt_dir=args.ckpt,
+                            ckpt_every=every, log_every=10, resume=True)
+        print(f"recovered and finished: final loss {out['final_loss']:.4f}")
 
 
 if __name__ == "__main__":

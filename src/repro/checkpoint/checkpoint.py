@@ -43,6 +43,12 @@ def _checksum(a: np.ndarray) -> str:
 
 
 class CheckpointManager:
+    """When ``graph`` is supplied (the Session-owned path: ``Session.train``
+    passes its runtime), save nodes ride that graph and ``close()`` only
+    drains pending writes - the graph's lifetime belongs to its owner.
+    Standalone use spins up a private graph, shut down on ``close()``.
+    Usable as a context manager either way."""
+
     def __init__(self, directory: str | Path, *, keep: int = 3,
                  async_save: bool = True,
                  graph: Optional[FuturizedGraph] = None):
@@ -122,6 +128,12 @@ class CheckpointManager:
         self.wait()
         if self._own_graph:
             self._graph.shutdown(wait=True)
+
+    def __enter__(self) -> "CheckpointManager":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
 
     def _gc(self):
         steps = sorted(self.all_steps())

@@ -34,6 +34,7 @@ futures under JAX's async dispatch.
 """
 from __future__ import annotations
 
+import bisect
 import collections
 import dataclasses
 import enum
@@ -47,8 +48,8 @@ from typing import Any, Callable, Iterable, Optional, Sequence
 import jax
 
 __all__ = [
-    "CancelledError", "FuturizedGraph", "InFlight", "Lane", "PhyFuture",
-    "Pipeline", "RuntimeStats", "TaskState",
+    "CancelledError", "FuturizedGraph", "HIST_EDGES_S", "InFlight", "Lane",
+    "PhyFuture", "Pipeline", "RuntimeStats", "TaskState",
 ]
 
 
@@ -75,6 +76,19 @@ class TaskState(enum.Enum):
 _TERMINAL = (TaskState.DONE, TaskState.ERROR, TaskState.CANCELLED)
 
 
+# wall-time histogram bucket edges (seconds): tasks land in the first
+# bucket whose edge exceeds their duration; the last bucket is open-ended
+HIST_EDGES_S = (1e-4, 1e-3, 1e-2, 1e-1, 1.0)
+
+
+def _fmt_s(s: float) -> str:
+    if s < 1e-3:
+        return f"{s * 1e6:g}us"
+    if s < 1.0:
+        return f"{s * 1e3:g}ms"
+    return f"{s:g}s"
+
+
 @dataclasses.dataclass
 class RuntimeStats:
     """Counters for one ``FuturizedGraph``; read via ``graph.stats()``."""
@@ -87,9 +101,34 @@ class RuntimeStats:
     busy_s: float = 0.0        # total worker time spent running tasks
     per_lane: dict = dataclasses.field(
         default_factory=lambda: {lane.name: 0 for lane in Lane})
+    # per-task wall time, histogrammed by lane over HIST_EDGES_S buckets
+    lane_hist: dict = dataclasses.field(
+        default_factory=lambda: {lane.name: [0] * (len(HIST_EDGES_S) + 1)
+                                 for lane in Lane})
+
+    def record_task(self, lane: "Lane", dt_s: float):
+        self.lane_hist[lane.name][bisect.bisect_right(HIST_EDGES_S,
+                                                      dt_s)] += 1
+
+    def hist_lines(self) -> list[str]:
+        """Human-readable per-lane wall-time histograms (non-empty lanes)."""
+        labels = ([f"<{_fmt_s(e)}" for e in HIST_EDGES_S]
+                  + [f">={_fmt_s(HIST_EDGES_S[-1])}"])
+        lines = []
+        for lane, counts in self.lane_hist.items():
+            if not sum(counts):
+                continue
+            cells = " ".join(f"{lb}:{c}" for lb, c in zip(labels, counts)
+                             if c)
+            lines.append(f"{lane:10s} {cells}")
+        return lines
 
     def to_json(self) -> dict:
-        return dataclasses.asdict(self)
+        out = dataclasses.asdict(self)
+        hist = out.pop("lane_hist")
+        out["lane_time_hist"] = {"edges_s": list(HIST_EDGES_S),
+                                 "counts": hist}
+        return out
 
 
 def _is_future(x) -> bool:
@@ -188,6 +227,7 @@ class FuturizedGraph:
         self._unfinished = 0          # nodes not yet terminal
         self._in_flight = 0           # nodes currently RUNNING
         self._stats = RuntimeStats()
+        self._trace_hooks: list[Callable[[PhyFuture, tuple], None]] = []
         self._closed = False
         self._workers = [
             threading.Thread(target=self._worker, daemon=True,
@@ -232,7 +272,8 @@ class FuturizedGraph:
                                   is TaskState.CANCELLED)
             elif node._ndeps == 0:
                 self._enqueue_locked(node)
-            return node
+        self._notify_trace(node, tuple(deps))
+        return node
 
     def immediate(self, value: Any, name: str = "immediate") -> PhyFuture:
         """An already-resolved future - wraps a value the caller computed
@@ -244,7 +285,37 @@ class FuturizedGraph:
             node._value = value
             self._stats.submitted += 1
             self._stats.completed += 1
-            return node
+        self._notify_trace(node, ())
+        return node
+
+    # -- tracing hooks ------------------------------------------------------
+    def add_trace_hook(self, cb: Callable[[PhyFuture, tuple], None]
+                       ) -> Callable[[], None]:
+        """Register ``cb(node, deps)``, fired for every node added to the
+        graph (after submission, outside the scheduler lock) - the hook the
+        frontend tracer uses to record the futurized tree as it is built.
+        Returns a zero-arg function that unregisters the hook."""
+        with self._lock:
+            self._trace_hooks.append(cb)
+
+        def remove():
+            with self._lock:
+                try:
+                    self._trace_hooks.remove(cb)
+                except ValueError:
+                    pass
+        return remove
+
+    def _notify_trace(self, node: PhyFuture, deps: tuple):
+        if not self._trace_hooks:
+            return
+        with self._lock:
+            hooks = list(self._trace_hooks)
+        for cb in hooks:
+            try:
+                cb(node, deps)
+            except Exception:   # noqa: BLE001 - tracing must not kill callers
+                pass
 
     # -- combinators --------------------------------------------------------
     def when_all(self, futures: Sequence[PhyFuture], *,
@@ -267,6 +338,7 @@ class FuturizedGraph:
                              name=name, seq=next(self._seq))
             self._stats.submitted += 1
             self._unfinished += 1
+        self._notify_trace(node, tuple(futures))
         remaining = [len(futures)]
 
         def on_done(i: int, f: PhyFuture):
@@ -318,7 +390,9 @@ class FuturizedGraph:
     def stats(self) -> RuntimeStats:
         with self._lock:
             return dataclasses.replace(
-                self._stats, per_lane=dict(self._stats.per_lane))
+                self._stats, per_lane=dict(self._stats.per_lane),
+                lane_hist={k: list(v)
+                           for k, v in self._stats.lane_hist.items()})
 
     def shutdown(self, wait: bool = True, cancel_pending: bool = False):
         """Drain (or cancel) outstanding work, then stop the workers.
@@ -369,13 +443,17 @@ class FuturizedGraph:
                                      is_leaf=_is_future)
                 value = fn(*a, **kw)
             except BaseException as e:  # noqa: BLE001 - propagated to deps
+                dt = time.perf_counter() - t1
                 with self._lock:
-                    self._stats.busy_s += time.perf_counter() - t1
+                    self._stats.busy_s += dt
+                    self._stats.record_task(node.lane, dt)
                     self._in_flight -= 1
                     self._fail_locked(node, e)
             else:
+                dt = time.perf_counter() - t1
                 with self._lock:
-                    self._stats.busy_s += time.perf_counter() - t1
+                    self._stats.busy_s += dt
+                    self._stats.record_task(node.lane, dt)
                     self._in_flight -= 1
                     self._complete_locked(node, value=value)
 

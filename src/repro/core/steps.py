@@ -180,7 +180,11 @@ class TrainStep:
         return out
 
 
-def make_train_step(cfg, mesh, strategy: Strategy, shape: dict) -> TrainStep:
+def make_train_step(cfg=None, mesh=None, strategy: Optional[Strategy] = None,
+                    shape: Optional[dict] = None, *, plan=None) -> TrainStep:
+    if plan is not None:
+        cfg, mesh, strategy, shape = plan.resolve(
+            "train", cfg=cfg, mesh=mesh, strategy=strategy, shape=shape)
     model = build_model(cfg)
     specs = model.specs()
     rules = default_rules(sequence_parallel=strategy.sequence_parallel)
@@ -367,7 +371,11 @@ class ServeStep:
     rules: ShardingRules
 
 
-def make_prefill_step(cfg, mesh, strategy: Strategy, shape: dict) -> ServeStep:
+def make_prefill_step(cfg=None, mesh=None, strategy: Optional[Strategy] = None,
+                      shape: Optional[dict] = None, *, plan=None) -> ServeStep:
+    if plan is not None:
+        cfg, mesh, strategy, shape = plan.resolve(
+            "prefill", cfg=cfg, mesh=mesh, strategy=strategy, shape=shape)
     scfg = _serve_cfg(cfg)
     model = build_model(scfg)
     specs = model.specs()
@@ -390,7 +398,11 @@ def make_prefill_step(cfg, mesh, strategy: Strategy, shape: dict) -> ServeStep:
                      rules=rules)
 
 
-def make_decode_step(cfg, mesh, strategy: Strategy, shape: dict) -> ServeStep:
+def make_decode_step(cfg=None, mesh=None, strategy: Optional[Strategy] = None,
+                     shape: Optional[dict] = None, *, plan=None) -> ServeStep:
+    if plan is not None:
+        cfg, mesh, strategy, shape = plan.resolve(
+            "decode", cfg=cfg, mesh=mesh, strategy=strategy, shape=shape)
     scfg = _serve_cfg(cfg)
     model = build_model(scfg)
     specs = model.specs()
@@ -417,12 +429,20 @@ def make_decode_step(cfg, mesh, strategy: Strategy, shape: dict) -> ServeStep:
                      rules=rules)
 
 
-def make_step(cfg, mesh, strategy: Strategy, shape: dict):
+def make_step(cfg=None, mesh=None, strategy: Optional[Strategy] = None,
+              shape: Optional[dict] = None, *, plan=None):
+    if shape is None and plan is not None:
+        if plan.shape is None:
+            raise ValueError(
+                "make_step(plan=...) dispatches on shape['kind']: give the "
+                "Plan a named shape or pass shape= explicitly (or call "
+                "make_train_step/make_prefill_step/make_decode_step)")
+        shape = plan.shape_of("train")   # named Plan shapes carry their kind
     kind = shape["kind"]
     if kind == "train":
-        return make_train_step(cfg, mesh, strategy, shape)
+        return make_train_step(cfg, mesh, strategy, shape, plan=plan)
     if kind == "prefill":
-        return make_prefill_step(cfg, mesh, strategy, shape)
+        return make_prefill_step(cfg, mesh, strategy, shape, plan=plan)
     if kind == "decode":
-        return make_decode_step(cfg, mesh, strategy, shape)
+        return make_decode_step(cfg, mesh, strategy, shape, plan=plan)
     raise ValueError(kind)

@@ -50,6 +50,16 @@ class LMStream:
         return out
 
 
+def stream_for(cfg, *, batch: int, seq: int, seed: int = 0) -> "LMStream":
+    """The default synthetic stream for an architecture: bigram LM tokens,
+    plus encoder frames for enc-dec families.  ``Session.train`` uses this
+    when no stream is supplied."""
+    encdec = cfg.family == "encdec"
+    return LMStream(vocab=cfg.vocab, batch=batch, seq=seq, seed=seed,
+                    frames_dim=cfg.d_model if encdec else 0,
+                    frames_len=cfg.enc_frames if encdec else 0)
+
+
 @dataclasses.dataclass
 class HARStream:
     """Windows of 9-channel signals; class = dominant frequency band."""

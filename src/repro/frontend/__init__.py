@@ -1,0 +1,10 @@
+"""Productivity frontend (DESIGN.md §8): the ``@futurize`` tracing
+decorator that turns plain Python into the futurized execution tree, and
+the declarative ``Plan`` -> ``Session`` API the launchers are shims over."""
+from .cli import cli_args, plan_from_args  # noqa: F401
+from .futurize import (Trace, TraceNode, current_trace,  # noqa: F401
+                       futurize, tracing)
+from .plan import Plan, Session  # noqa: F401
+
+__all__ = ["Plan", "Session", "Trace", "TraceNode", "cli_args",
+           "current_trace", "futurize", "plan_from_args", "tracing"]

@@ -1,0 +1,49 @@
+"""Shared launcher flags: the `--arch/--tiny/--data/--model/--seq/--batch`
+block that was copied across launch/train.py, launch/serve.py and
+launch/dryrun.py lives here once, and maps 1:1 onto ``Plan`` fields."""
+from __future__ import annotations
+
+import argparse
+from typing import Optional
+
+from ..configs import ARCH_IDS
+from .plan import Plan
+
+__all__ = ["cli_args", "plan_from_args"]
+
+
+def cli_args(ap: Optional[argparse.ArgumentParser] = None, *,
+             arch_default: Optional[str] = "qwen3-4b", tiny: bool = True,
+             mesh: bool = True, batch: Optional[int] = None,
+             seq: Optional[int] = None,
+             seed: bool = True) -> argparse.ArgumentParser:
+    """Add the shared launcher flags to ``ap`` (created if None).  ``batch``
+    and ``seq`` are the default values when those flags apply (None omits
+    them); ``arch_default=None`` adds ``--arch`` without a default."""
+    if ap is None:
+        ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=arch_default, choices=ARCH_IDS)
+    if tiny:
+        ap.add_argument("--tiny", action="store_true", default=True)
+        ap.add_argument("--full", dest="tiny", action="store_false")
+    if mesh:
+        ap.add_argument("--data", type=int, default=1)
+        ap.add_argument("--model", type=int, default=1)
+    if seq is not None:
+        ap.add_argument("--seq", type=int, default=seq)
+    if batch is not None:
+        ap.add_argument("--batch", type=int, default=batch)
+    if seed:
+        ap.add_argument("--seed", type=int, default=0)
+    return ap
+
+
+def plan_from_args(args, **overrides) -> Plan:
+    """Build a ``Plan`` from a ``cli_args()`` namespace; keyword overrides
+    (e.g. a full ``strategy=Strategy(...)``) win over parsed flags."""
+    fields = {name: getattr(args, name)
+              for name in ("arch", "tiny", "data", "model", "batch", "seq",
+                           "seed")
+              if hasattr(args, name)}
+    fields.update(overrides)
+    return Plan(**fields)

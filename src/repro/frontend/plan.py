@@ -1,0 +1,507 @@
+"""Plan/Session: the declarative frontend over the futurized runtime.
+
+A ``Plan`` is the *what* of a run - architecture, mesh axes, strategy,
+shapes - a frozen value that touches no device state.  ``plan.compile()``
+builds a ``Session``: the mesh is made, step functions are jitted lazily,
+and ONE futurized runtime (`core/futures.py`) owns every host-side task of
+the session - prefetch, metric forcing, checkpoint I/O, serve wave prep and
+the decode chain.  ``session.train`` / ``session.serve`` / ``session.dryrun``
+subsume the old launcher bodies; ``launch/{train,serve,dryrun}.py`` are now
+thin argparse shims over this API (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+import traceback
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint.checkpoint import CheckpointManager
+from ..configs import SHAPES, get_config
+from ..core import hlo_costs
+from ..core import steps as steps_lib
+from ..core.futures import FuturizedGraph, Lane, Pipeline
+from ..core.resilience import ResilientRunner
+from ..core.sharding import init_params, param_structs
+from ..data.pipeline import Prefetcher, stream_for
+from ..launch.mesh import make_local_mesh, make_production_mesh, mesh_devices
+from .futurize import Trace
+
+__all__ = ["Plan", "Session", "cell_is_applicable", "lower_cell",
+           "roofline_terms"]
+
+# TPU v5e roofline model constants (per chip); used by session.dryrun and
+# the launch/dryrun.py sweep
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW_PER_LINK = 50e9
+ICI_LINKS = 3
+HBM_BYTES = 16e9
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """Declarative run description: arch + mesh axes + strategy + shapes.
+
+    ``strategy`` accepts a ``core.steps.Strategy`` or a bare name
+    ("phylanx" | "horovod" | "zero1" | "onebit").  ``shape`` optionally
+    names a cell of ``configs.SHAPES`` (the dry-run path); otherwise
+    ``seq``/``batch`` define the shape per kind.  ``mesh`` is "local"
+    (``data``/``model``/``pod`` axis sizes over host devices) or
+    "single"/"multipod" (the production 256/512-chip meshes).
+    """
+    arch: str = "qwen3-4b"
+    tiny: bool = True
+    data: int = 1
+    model: int = 1
+    pod: int = 1
+    mesh: str = "local"                  # local | single | multipod
+    strategy: Any = "phylanx"
+    batch: int = 8
+    seq: int = 64
+    seed: int = 0
+    shape: Optional[str] = None          # named SHAPES cell (dryrun)
+    remat: bool = False
+    overrides: dict = dataclasses.field(default_factory=dict)
+
+    # -- resolution ---------------------------------------------------------
+    def config(self):
+        cfg = get_config(self.arch, tiny=self.tiny)
+        over = dict(self.overrides)
+        if self.tiny:
+            over.setdefault("remat", self.remat)
+        return dataclasses.replace(cfg, **over) if over else cfg
+
+    def build_mesh(self):
+        if self.mesh == "local":
+            return make_local_mesh(data=self.data, model=self.model,
+                                   pod=self.pod)
+        return make_production_mesh(multi_pod=(self.mesh == "multipod"))
+
+    def build_strategy(self) -> steps_lib.Strategy:
+        if isinstance(self.strategy, steps_lib.Strategy):
+            return self.strategy
+        return steps_lib.Strategy(name=self.strategy)
+
+    def shape_of(self, kind: str) -> dict:
+        if self.shape is not None:
+            return dict(SHAPES[self.shape])
+        return {"seq_len": self.seq, "global_batch": self.batch,
+                "kind": kind}
+
+    def resolve(self, kind: str, *, cfg=None, mesh=None, strategy=None,
+                shape=None) -> tuple:
+        """(cfg, mesh, strategy, shape) with explicit arguments winning -
+        the hook the ``core.steps`` builders call for ``plan=``."""
+        return (cfg if cfg is not None else self.config(),
+                mesh if mesh is not None else self.build_mesh(),
+                strategy if strategy is not None else self.build_strategy(),
+                shape if shape is not None else self.shape_of(kind))
+
+    def compile(self) -> "Session":
+        return Session(self)
+
+
+class Session:
+    """Compiled form of a ``Plan``: mesh + strategy + lazily-built step
+    functions, and one futurized runtime for every host-side task.  Use as
+    a context manager (or call ``close()``) to run the shutdown barrier."""
+
+    def __init__(self, plan: Plan, *, max_workers: int = 4):
+        self.plan = plan
+        self.cfg = plan.config()
+        self.mesh = plan.build_mesh()
+        self.strategy = plan.build_strategy()
+        self.runtime = FuturizedGraph(max_workers=max_workers,
+                                      name=f"session:{plan.arch}")
+        self._train_step = None
+        self._serve_steps: dict[tuple, tuple] = {}
+        self._closed = False
+
+    # -- lifecycle ----------------------------------------------------------
+    def close(self):
+        if not self._closed:
+            self._closed = True
+            self.runtime.shutdown(wait=True)
+
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def stats(self):
+        return self.runtime.stats()
+
+    # -- steps --------------------------------------------------------------
+    @property
+    def train_step(self) -> steps_lib.TrainStep:
+        if self._train_step is None:
+            # already-resolved session state wins; the plan fills the shape
+            self._train_step = steps_lib.make_train_step(
+                self.cfg, self.mesh, self.strategy, plan=self.plan)
+        return self._train_step
+
+    def _serve_steps_for(self, prompt_len: int, gen_len: int, slots: int):
+        key = (prompt_len, gen_len, slots)
+        if key not in self._serve_steps:
+            cache_len = prompt_len + gen_len
+            pre = steps_lib.make_prefill_step(
+                self.cfg, self.mesh, self.strategy,
+                {"seq_len": cache_len, "global_batch": slots,
+                 "kind": "prefill"})
+            dec = steps_lib.make_decode_step(
+                self.cfg, self.mesh, self.strategy,
+                {"seq_len": cache_len, "global_batch": slots,
+                 "kind": "decode"})
+            self._serve_steps[key] = (pre, dec)
+        return self._serve_steps[key]
+
+    # -- train --------------------------------------------------------------
+    def train(self, stream=None, *, steps: int = 50, hooks: Any = None,
+              ckpt_dir: str = "", ckpt_every: int = 20, log_every: int = 5,
+              resume: bool = False, fail_at_step: Optional[int] = None,
+              resilience: str = "none", verbose: bool = True) -> dict:
+        """The training loop the old ``launch/train.py`` hand-wired: stream
+        -> prefetch nodes -> step -> in-flight pipeline -> async checkpoint
+        nodes, all on the session runtime.  ``hooks`` is any object with
+        optional ``on_step(it, metrics)``, ``on_log(it, loss)`` and
+        ``on_checkpoint(step, future)`` methods."""
+        plan, runtime, step = self.plan, self.runtime, self.train_step
+        if stream is None:
+            stream = stream_for(self.cfg, batch=plan.batch, seq=plan.seq,
+                                seed=plan.seed)
+        params, opt = step.init(jax.random.PRNGKey(plan.seed))
+        start = 0
+
+        ckpt = (CheckpointManager(ckpt_dir, keep=3, graph=runtime)
+                if ckpt_dir else None)
+        if ckpt is not None and resume:
+            latest = ckpt.latest_step()
+            if latest is not None:
+                start, (params, opt) = ckpt.restore(
+                    (params, opt),
+                    shardings=(step.param_shardings, step.opt_shardings))
+                if verbose:
+                    print(f"[train] resumed from step {start}")
+
+        prefetch = Prefetcher(stream, step.batch_shardings, graph=runtime)
+        runner = (ResilientRunner(step.fn_nodonate)
+                  if resilience in ("replay", "replicate") else None)
+        inflight = Pipeline(depth=2)
+        log_futs: list = []
+        t_log = time.time()
+        on_step = getattr(hooks, "on_step", None)
+        on_log = getattr(hooks, "on_log", None)
+        on_ckpt = getattr(hooks, "on_checkpoint", None)
+
+        def _force_and_log(it, m, t_start):
+            # Runs on a runtime worker: forcing metrics never stalls dispatch.
+            loss = float(m["loss"])
+            dt = (time.time() - t_start) / log_every
+            if verbose:
+                print(f"[train] step {it + 1:5d} loss {loss:8.4f} "
+                      f"gnorm {float(m['grad_norm']):8.3f} "
+                      f"{dt * 1e3:8.1f} ms/step", flush=True)
+            if on_log is not None:
+                on_log(it, loss)
+            return loss
+
+        metrics = None
+        try:
+            for it in range(start, steps):
+                batch = prefetch.get(it)
+                if fail_at_step is not None and it == fail_at_step \
+                        and not resume:
+                    raise RuntimeError(f"injected node failure at step {it}")
+                if resilience == "replay":
+                    metrics, params, opt = runner.replay(params, opt, batch)
+                elif resilience == "replicate":
+                    metrics, params, opt = runner.replicate(params, opt,
+                                                            batch, n=2)
+                else:
+                    metrics, params, opt = step.fn(params, opt, batch)
+                inflight.push(it, metrics)
+                if on_step is not None:
+                    on_step(it, metrics)
+                if (it + 1) % log_every == 0:
+                    # CHECKPOINT lane: forcing metrics for logs must never
+                    # outrank the PREFETCH nodes the loop blocks on next
+                    log_futs.append(runtime.defer(
+                        _force_and_log, it, metrics, t_log,
+                        lane=Lane.CHECKPOINT, name=f"log:{it}"))
+                    t_log = time.time()
+                if ckpt is not None and (it + 1) % ckpt_every == 0:
+                    # The write node depends on step retirement: file I/O
+                    # starts only after the step's outputs resolve on device.
+                    retired = runtime.defer(jax.block_until_ready, metrics,
+                                            lane=Lane.CHECKPOINT,
+                                            name=f"retire:{it}")
+                    fut = ckpt.save(it + 1, (params, opt), deps=(retired,),
+                                    meta={"arch": plan.arch})
+                    if on_ckpt is not None:
+                        on_ckpt(it + 1, fut)
+            inflight.drain()
+            if ckpt is not None:
+                ckpt.save(steps, (params, opt), meta={"arch": plan.arch})
+        finally:
+            # Shutdown barrier - also on the injected-failure path, so a
+            # crash never loses a save that was already requested: retire
+            # in-flight steps, land every pending checkpoint node.  The
+            # runtime itself stays up: it belongs to the session.
+            inflight.drain()
+            prefetch.close()       # cancel batches nobody will consume
+            if ckpt is not None:
+                ckpt.close()
+            runtime.barrier()
+
+        losses = [f.result() for f in log_futs]
+        st = runtime.stats()
+        if metrics is None:    # resumed at/after steps: nothing left to run
+            if verbose:
+                print(f"[train] nothing to do: resumed at step {start} "
+                      f">= steps {steps}")
+            return {"final_loss": float("nan"), "losses": losses,
+                    "params": params, "step": start,
+                    "runtime_stats": st.to_json()}
+        final = float(metrics["loss"])
+        if verbose:
+            print(f"[train] done: final loss {final:.4f} "
+                  f"(host tasks {st.completed}, "
+                  f"max in-flight {st.max_in_flight})")
+            for line in st.hist_lines():
+                print(f"[train] task wall-time {line}")
+        return {"final_loss": final, "losses": losses,
+                "params": params, "step": steps,
+                "runtime_stats": st.to_json()}
+
+    # -- serve --------------------------------------------------------------
+    def serve(self, requests: int = 8, *, prompt_len: int = 32,
+              gen_len: int = 16, slots: int = 4, prompts=None,
+              verbose: bool = True) -> dict:
+        """Batched prefill + decode with slot refill, as a futurized tree:
+        each wave is a ``prefill`` node plus ``gen_len`` chained ``decode``
+        nodes (dependency edges carry the (token, cache) pair), while the
+        next wave's host prep runs as a PREFETCH node.  Returns throughput
+        plus the traced node names - decode steps are explicit, named
+        graph nodes, not just wave prep."""
+        plan, runtime, cfg = self.plan, self.runtime, self.cfg
+        pre, dec = self._serve_steps_for(prompt_len, gen_len, slots)
+        params = init_params(pre.specs, jax.random.PRNGKey(plan.seed))
+        params = jax.device_put(params, pre.param_shardings)
+
+        if prompts is None:
+            rng = np.random.default_rng(plan.seed)
+            prompts = [rng.integers(0, cfg.vocab,
+                                    prompt_len).astype(np.int32)
+                       for _ in range(requests)]
+        waiting = list(prompts)
+        requests = len(waiting)
+        if not waiting:        # nothing to serve: no dummy wave, no tokens
+            return {"tokens_per_s": 0.0, "requests": 0, "tokens": 0,
+                    "nodes": [], "trace": [],
+                    "runtime_stats": self.runtime.stats().to_json()}
+        tok_sh = dec.batch_shardings["tokens"]
+
+        def prepare_wave(wave: list) -> dict:
+            toks = jax.device_put(jnp.asarray(np.stack(wave)),
+                                  pre.batch_shardings["tokens"])
+            batch = {"tokens": toks}
+            if cfg.family == "encdec":
+                batch["frames"] = jnp.zeros(
+                    (slots, cfg.enc_frames, cfg.d_model), cfg.c_dtype)
+            return batch
+
+        def take_wave() -> tuple[list, int]:
+            wave = [waiting.pop() for _ in range(min(slots, len(waiting)))]
+            n_real = len(wave)
+            while len(wave) < slots:            # pad idle slots
+                wave.append(np.zeros(prompt_len, np.int32))
+            return wave, n_real
+
+        def _prefill(batch, *_prev_tail):
+            # *_prev_tail: dispatch-order edge from the previous wave's last
+            # decode node; its value is unused
+            logits, cache = pre.fn(params, batch)
+            tok = jax.device_put(
+                jnp.argmax(logits, -1)[:, None].astype(jnp.int32), tok_sh)
+            return tok, cache
+
+        def _decode(carry, pos):
+            tok, cache = carry
+            logits, cache = dec.fn(params, cache, {"tokens": tok}, pos)
+            tok = jax.device_put(
+                jnp.argmax(logits, -1)[:, None].astype(jnp.int32), tok_sh)
+            return tok, cache
+
+        tracer = Trace(runtime)
+        remove = runtime.add_trace_hook(tracer.record)
+        done, tokens_out, w = 0, 0, 0
+        t0 = time.time()
+        try:
+            wave, n_real = take_wave()
+            batch_fut = runtime.defer(prepare_wave, wave, lane=Lane.PREFETCH,
+                                      name="wave:0")
+            tail = None
+            while True:
+                nxt = None
+                if waiting and done + n_real < requests:
+                    next_wave, next_real = take_wave()
+                    nxt = (runtime.defer(prepare_wave, next_wave,
+                                         lane=Lane.PREFETCH,
+                                         name=f"wave:{w + 1}"), next_real)
+                # The wave's futurized tree, built up-front: nothing below
+                # forces a transfer, so prefill and every decode step stay
+                # in flight back-to-back under JAX async dispatch.
+                deps = (batch_fut,) if tail is None else (batch_fut, tail)
+                carry = runtime.defer(_prefill, *deps, name=f"prefill:w{w}")
+                for t in range(gen_len):
+                    carry = runtime.defer(_decode, carry,
+                                          jnp.int32(prompt_len + t),
+                                          name=f"decode:w{w}:t{t}")
+                tail = carry
+                tokens_out += slots * gen_len
+                done += n_real
+                if nxt is None:
+                    break
+                batch_fut, n_real = nxt
+                w += 1
+            last_tok, _ = tail.result()
+            jax.block_until_ready(last_tok)   # honest timing: retire it all
+        finally:
+            remove()
+        dt = time.time() - t0
+        tps = tokens_out / dt
+        st = runtime.stats()
+        nodes = tracer.names()
+        n_decode = sum(n.startswith("decode:") for n in nodes)
+        if verbose:
+            print(f"[serve] {requests} requests, {tokens_out} tokens in "
+                  f"{dt:.2f}s -> {tps:.1f} tok/s (slots={slots}, "
+                  f"decode nodes {n_decode}, host tasks {st.completed})")
+        return {"tokens_per_s": tps, "requests": requests,
+                "tokens": tokens_out, "nodes": nodes,
+                "trace": tracer.signature(), "runtime_stats": st.to_json()}
+
+    # -- dryrun -------------------------------------------------------------
+    def dryrun(self, shape: Optional[str] = None) -> dict:
+        """Lower + compile this plan's cell and return its analysis record
+        (memory, loop-aware HLO costs, collectives, roofline terms) - the
+        per-cell body of ``launch/dryrun.py``."""
+        shape_name = shape or self.plan.shape
+        if shape_name is None:
+            raise ValueError("dryrun needs a named shape (Plan.shape or "
+                             "the shape= argument)")
+        cfg, mesh = self.cfg, self.mesh
+        ok, why = cell_is_applicable(cfg, shape_name)
+        if not ok:
+            return {"status": "skipped", "reason": why}
+        n_dev = mesh_devices(mesh)
+        try:
+            step, lowered, compiled, t_lower, t_compile = lower_cell(
+                cfg, mesh, shape_name, self.strategy)
+            ca = compiled.cost_analysis() or {}
+            if isinstance(ca, (list, tuple)):  # old jax: per-program dicts
+                ca = ca[0] if ca else {}
+            try:
+                ma = compiled.memory_analysis()
+                mem = {
+                    "argument_bytes": ma.argument_size_in_bytes,
+                    "output_bytes": ma.output_size_in_bytes,
+                    "temp_bytes": ma.temp_size_in_bytes,
+                    "alias_bytes": ma.alias_size_in_bytes,
+                    "code_bytes": ma.generated_code_size_in_bytes,
+                }
+                mem["peak_bytes_est"] = (mem["argument_bytes"]
+                                         + mem["output_bytes"]
+                                         - mem["alias_bytes"]
+                                         + mem["temp_bytes"])
+            except Exception as e:  # pragma: no cover
+                mem = {"error": str(e)}
+            # loop-aware analysis (cost_analysis counts while bodies once;
+            # see core/hlo_costs.py) - the roofline source of truth
+            costs = hlo_costs.analyze(compiled.as_text(), n_dev)
+            terms = roofline_terms(cfg, shape_name, costs.flops, costs.bytes,
+                                   costs.total_wire_bytes, n_dev)
+            return {
+                "status": "ok", "n_devices": n_dev,
+                "t_lower_s": t_lower, "t_compile_s": t_compile,
+                "flops_per_device": costs.flops,
+                "bytes_per_device": costs.bytes,
+                "memory": mem, "collectives": costs.to_json(),
+                "roofline": terms,
+                "xla_cost_analysis": {
+                    "flops": float(ca.get("flops", 0.0)),
+                    "bytes_accessed": float(ca.get("bytes accessed", 0.0))},
+                "fits_hbm": bool(mem.get("peak_bytes_est", 0) < HBM_BYTES),
+            }
+        except Exception as e:
+            return {"status": "error", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-4000:]}
+
+
+# ---------------------------------------------------------------------------
+# Cell analysis helpers (shared with launch/dryrun.py and benchmarks)
+# ---------------------------------------------------------------------------
+def cell_is_applicable(cfg, shape_name: str) -> tuple[bool, str]:
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return False, ("long_500k needs sub-quadratic attention "
+                       "(skip noted in DESIGN.md)")
+    return True, ""
+
+
+def lower_cell(cfg, mesh, shape_name: str, strategy: steps_lib.Strategy):
+    shape = dict(SHAPES[shape_name])
+    kind = shape["kind"]
+    step = steps_lib.make_step(cfg, mesh, strategy, shape)
+
+    if kind == "train":
+        args = (step.param_structs(), step.opt_structs(),
+                steps_lib.input_specs(cfg, shape))
+    elif kind == "prefill":
+        scfg = steps_lib._serve_cfg(cfg)
+        args = (param_structs(step.specs),
+                steps_lib.input_specs(scfg, shape))
+    else:  # decode
+        scfg = steps_lib._serve_cfg(cfg)
+        args = (param_structs(step.specs), param_structs(step.cache_specs),
+                steps_lib.input_specs(scfg, shape),
+                jax.ShapeDtypeStruct((), jnp.int32))
+
+    t0 = time.time()
+    lowered = step.fn.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    return step, lowered, compiled, t_lower, t_compile
+
+
+def roofline_terms(cfg, shape_name: str, flops_dev: float, bytes_dev: float,
+                   wire_bytes_dev: float, n_dev: int) -> dict:
+    shape = SHAPES[shape_name]
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = wire_bytes_dev / (ICI_BW_PER_LINK * ICI_LINKS)
+    dominant = max(("compute", t_compute), ("memory", t_memory),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+    # useful model flops: 6 N D (train) / 2 N D (fwd) per token
+    tot, act = cfg.n_params()
+    tokens = shape["global_batch"] * (shape["seq_len"]
+                                      if shape["kind"] != "decode" else 1)
+    mult = 6 if shape["kind"] == "train" else 2
+    model_flops = mult * act * tokens / n_dev
+    return {
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops_dev": model_flops,
+        "useful_flops_ratio": model_flops / flops_dev if flops_dev else 0.0,
+        "bound_step_s": max(t_compute, t_memory, t_coll),
+        "roofline_fraction": (t_compute / max(t_compute, t_memory, t_coll)
+                              if max(t_compute, t_memory, t_coll) > 0
+                              else 0.0),
+    }

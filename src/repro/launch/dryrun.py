@@ -1,14 +1,11 @@
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
-"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
-
-For each cell this produces a JSON artifact under artifacts/dryrun/ with
-  * compiled memory analysis     (proves the cell fits per device)
-  * cost analysis                (per-device HLO FLOPs / bytes)
-  * collective inventory + wire-byte model (core/hlo_analysis.py)
-  * the roofline terms of DESIGN.md §6
-so EXPERIMENTS.md §Dry-run and §Roofline are generated from artifacts, not
+"""Multi-pod dry-run sweep: lower + compile every (arch x shape x mesh)
+cell.  The per-cell body - lowering, memory/cost analysis, collective
+inventory, roofline terms - is ``frontend.Session.dryrun``; this module is
+the sweep CLI plus the JSON artifact cache under artifacts/dryrun/, so
+EXPERIMENTS.md §Dry-run and §Roofline are generated from artifacts, not
 hand-typed numbers.
 
 Usage:
@@ -16,83 +13,21 @@ Usage:
   python -m repro.launch.dryrun --all [--mesh both] [--strategy phylanx]
   python -m repro.launch.dryrun --list
 """
-import argparse
 import json
 import time
-import traceback
 from pathlib import Path
 
-import jax
-import jax.numpy as jnp
-
 from repro.configs import ARCH_IDS, SHAPES, get_config
-from repro.core import hlo_analysis, hlo_costs, steps as steps_lib
-from repro.core.sharding import param_structs
-from repro.launch.mesh import make_production_mesh, mesh_devices
-
-# TPU v5e model constants (per chip)
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
-ICI_BW_PER_LINK = 50e9
-ICI_LINKS = 3
-HBM_BYTES = 16e9
-
-
-def cell_is_applicable(cfg, shape_name: str) -> tuple[bool, str]:
-    if shape_name == "long_500k" and not cfg.subquadratic:
-        return False, "long_500k needs sub-quadratic attention (skip noted in DESIGN.md)"
-    return True, ""
-
-
-def lower_cell(cfg, mesh, shape_name: str, strategy: steps_lib.Strategy):
-    shape = dict(SHAPES[shape_name])
-    kind = shape["kind"]
-    step = steps_lib.make_step(cfg, mesh, strategy, shape)
-
-    if kind == "train":
-        args = (step.param_structs(), step.opt_structs(),
-                steps_lib.input_specs(cfg, shape))
-    elif kind == "prefill":
-        scfg = steps_lib._serve_cfg(cfg)
-        args = (param_structs(step.specs), steps_lib.input_specs(scfg, shape))
-    else:  # decode
-        scfg = steps_lib._serve_cfg(cfg)
-        args = (param_structs(step.specs), param_structs(step.cache_specs),
-                steps_lib.input_specs(scfg, shape),
-                jax.ShapeDtypeStruct((), jnp.int32))
-
-    t0 = time.time()
-    lowered = step.fn.lower(*args)
-    t_lower = time.time() - t0
-    t0 = time.time()
-    compiled = lowered.compile()
-    t_compile = time.time() - t0
-    return step, lowered, compiled, t_lower, t_compile
-
-
-def roofline_terms(cfg, shape_name: str, flops_dev: float, bytes_dev: float,
-                   wire_bytes_dev: float, n_dev: int) -> dict:
-    shape = SHAPES[shape_name]
-    t_compute = flops_dev / PEAK_FLOPS
-    t_memory = bytes_dev / HBM_BW
-    t_coll = wire_bytes_dev / (ICI_BW_PER_LINK * ICI_LINKS)
-    dominant = max(("compute", t_compute), ("memory", t_memory),
-                   ("collective", t_coll), key=lambda kv: kv[1])[0]
-    # useful model flops: 6 N D (train) / 2 N D (fwd) per token
-    tot, act = cfg.n_params()
-    tokens = shape["global_batch"] * (shape["seq_len"]
-                                      if shape["kind"] != "decode" else 1)
-    mult = 6 if shape["kind"] == "train" else 2
-    model_flops = mult * act * tokens / n_dev
-    return {
-        "t_compute_s": t_compute, "t_memory_s": t_memory,
-        "t_collective_s": t_coll, "dominant": dominant,
-        "model_flops_dev": model_flops,
-        "useful_flops_ratio": model_flops / flops_dev if flops_dev else 0.0,
-        "bound_step_s": max(t_compute, t_memory, t_coll),
-        "roofline_fraction": (t_compute / max(t_compute, t_memory, t_coll)
-                              if max(t_compute, t_memory, t_coll) > 0 else 0.0),
-    }
+from repro.core import steps as steps_lib
+from repro.frontend import Plan, cli_args
+# re-exported for benchmarks/analyze_cell.py and friends
+from repro.frontend.plan import HBM_BW  # noqa: F401
+from repro.frontend.plan import HBM_BYTES  # noqa: F401
+from repro.frontend.plan import ICI_BW_PER_LINK  # noqa: F401
+from repro.frontend.plan import ICI_LINKS  # noqa: F401
+from repro.frontend.plan import PEAK_FLOPS  # noqa: F401
+from repro.frontend.plan import (cell_is_applicable, lower_cell,
+                                 roofline_terms)
 
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str,
@@ -105,73 +40,34 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         return json.loads(out_path.read_text())
     out_path.parent.mkdir(parents=True, exist_ok=True)
 
-    import dataclasses as _dc
-    cfg = get_config(arch)
+    over = dict(overrides or {})
     if moe_dispatch:
-        cfg = _dc.replace(cfg, moe_dispatch=moe_dispatch)
-    if overrides:
-        cfg = _dc.replace(cfg, **overrides)
-    ok, why = cell_is_applicable(cfg, shape_name)
+        over["moe_dispatch"] = moe_dispatch
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
            "strategy": strategy_name, "tag": tag,
            "seq_parallel": seq_parallel, "moe_dispatch": moe_dispatch,
            "overrides": overrides or {},
            "timestamp": time.strftime("%Y-%m-%d %H:%M:%S")}
+    plan = Plan(arch=arch, tiny=False, mesh=mesh_kind, shape=shape_name,
+                strategy=steps_lib.Strategy(name=strategy_name,
+                                            sequence_parallel=seq_parallel),
+                overrides=over)
+    # applicability is checked on the overridden config, before any
+    # mesh/device state is touched
+    ok, why = cell_is_applicable(plan.config(), shape_name)
     if not ok:
         rec.update(status="skipped", reason=why)
         out_path.write_text(json.dumps(rec, indent=1))
         return rec
 
-    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
-    n_dev = mesh_devices(mesh)
-    strategy = steps_lib.Strategy(name=strategy_name,
-                                  sequence_parallel=seq_parallel)
-    try:
-        step, lowered, compiled, t_lower, t_compile = lower_cell(
-            cfg, mesh, shape_name, strategy)
-        ca = compiled.cost_analysis() or {}
-        if isinstance(ca, (list, tuple)):     # old jax: list of per-program dicts
-            ca = ca[0] if ca else {}
-        try:
-            ma = compiled.memory_analysis()
-            mem = {
-                "argument_bytes": ma.argument_size_in_bytes,
-                "output_bytes": ma.output_size_in_bytes,
-                "temp_bytes": ma.temp_size_in_bytes,
-                "alias_bytes": ma.alias_size_in_bytes,
-                "code_bytes": ma.generated_code_size_in_bytes,
-            }
-            mem["peak_bytes_est"] = (mem["argument_bytes"] + mem["output_bytes"]
-                                     - mem["alias_bytes"] + mem["temp_bytes"])
-        except Exception as e:  # pragma: no cover
-            mem = {"error": str(e)}
-        txt = compiled.as_text()
-        # loop-aware analysis (cost_analysis counts while bodies once; see
-        # core/hlo_costs.py) - this is the roofline source of truth
-        costs = hlo_costs.analyze(txt, n_dev)
-        flops_dev = costs.flops
-        bytes_dev = costs.bytes
-        terms = roofline_terms(cfg, shape_name, flops_dev, bytes_dev,
-                               costs.total_wire_bytes, n_dev)
-        rec.update(
-            status="ok", n_devices=n_dev,
-            t_lower_s=t_lower, t_compile_s=t_compile,
-            flops_per_device=flops_dev, bytes_per_device=bytes_dev,
-            memory=mem, collectives=costs.to_json(), roofline=terms,
-            xla_cost_analysis={"flops": float(ca.get("flops", 0.0)),
-                               "bytes_accessed": float(ca.get("bytes accessed", 0.0))},
-            fits_hbm=bool(mem.get("peak_bytes_est", 0) < HBM_BYTES),
-        )
-    except Exception as e:
-        rec.update(status="error", error=f"{type(e).__name__}: {e}",
-                   traceback=traceback.format_exc()[-4000:])
+    with plan.compile() as session:
+        rec.update(session.dryrun())
     out_path.write_text(json.dumps(rec, indent=1))
     return rec
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap = cli_args(arch_default=None, tiny=False, mesh=False, seed=False)
     ap.add_argument("--shape", choices=sorted(SHAPES))
     ap.add_argument("--mesh", choices=["single", "multipod", "both"],
                     default="single")

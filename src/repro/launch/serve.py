@@ -1,10 +1,10 @@
-"""Serving launcher: batched prefill + decode with a slot-based scheduler.
+"""Serving launcher: a thin argparse shim over ``frontend.Plan/Session``.
 
-Continuous-batching-lite: a fixed pool of decode slots; finished sequences
-(hit --gen-len) are retired and refilled from the waiting queue with a fresh
-prefill.  All requests in a refill wave share a prompt length (pad-align),
-so the decode step stays a single compiled program - the paper's SPMD
-execution model applied to inference.
+Continuous-batching-lite lives in ``Session.serve`` (frontend/plan.py): a
+fixed pool of decode slots; finished sequences (hit --gen-len) are retired
+and refilled from the waiting queue with a fresh prefill.  Each wave runs
+as a futurized tree - a prefill node plus chained, named decode nodes -
+while the next wave's host prep runs as a PREFETCH node.
 
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --tiny \
@@ -13,117 +13,24 @@ Example:
 from __future__ import annotations
 
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs import ARCH_IDS, get_config
-from repro.core import steps as steps_lib
-from repro.core.futures import FuturizedGraph, Lane
-from repro.launch.mesh import make_local_mesh
+from repro.frontend import cli_args, plan_from_args
 
 
 def run(args) -> dict:
-    cfg = get_config(args.arch, tiny=args.tiny)
-    mesh = make_local_mesh(data=args.data, model=args.model)
-    cache_len = args.prompt_len + args.gen_len
-    shape = {"seq_len": cache_len, "global_batch": args.slots,
-             "kind": "decode"}
-    strategy = steps_lib.Strategy()
-    pre = steps_lib.make_prefill_step(
-        cfg, mesh, strategy,
-        {"seq_len": cache_len, "global_batch": args.slots, "kind": "prefill"})
-    dec = steps_lib.make_decode_step(cfg, mesh, strategy, shape)
-
-    from repro.core.sharding import init_params
-    params = init_params(pre.specs, jax.random.PRNGKey(args.seed))
-    params = jax.device_put(params, pre.param_shardings)
-
-    rng = np.random.default_rng(args.seed)
-    waiting = [rng.integers(0, cfg.vocab, args.prompt_len).astype(np.int32)
-               for _ in range(args.requests)]
-
-    # Futurized wave prep: while the current wave's prefill + decode steps
-    # are in flight on device (async dispatch), a PREFETCH-lane node stacks
-    # and device_puts the *next* wave's prompts, so refill never waits on
-    # host work and prefill of wave k+1 can dispatch right as wave k drains.
-    runtime = FuturizedGraph(max_workers=2, name="serve")
-
-    def prepare_wave(wave: list[np.ndarray]) -> dict:
-        prompts = jax.device_put(jnp.asarray(np.stack(wave)),
-                                 pre.batch_shardings["tokens"])
-        batch = {"tokens": prompts}
-        if cfg.family == "encdec":
-            batch["frames"] = jnp.zeros(
-                (args.slots, cfg.enc_frames, cfg.d_model), cfg.c_dtype)
-        return batch
-
-    def take_wave() -> tuple[list[np.ndarray], int]:
-        wave = [waiting.pop() for _ in range(min(args.slots, len(waiting)))]
-        n_real = len(wave)
-        while len(wave) < args.slots:           # pad idle slots
-            wave.append(np.zeros(args.prompt_len, np.int32))
-        return wave, n_real
-
-    done, t0 = 0, time.time()
-    tokens_out = 0
-    last_tok = None
-    try:
-        wave, n_real = take_wave()
-        batch_fut = runtime.defer(prepare_wave, wave, lane=Lane.PREFETCH,
-                                  name="wave:0")
-        while done < args.requests:
-            batch = batch_fut.result()
-            next_wave = None
-            if len(waiting) and done + n_real < args.requests:
-                next_wave, next_real = take_wave()
-                batch_fut = runtime.defer(prepare_wave, next_wave,
-                                          lane=Lane.PREFETCH,
-                                          name=f"wave:{done + n_real}")
-            logits, cache = pre.fn(params, batch)
-            # prefill wrote [0, prompt_len); decode continues from there.
-            # Nothing below forces a transfer: prefill and every decode step
-            # stay in flight back-to-back under JAX async dispatch.
-            tok_sh = dec.batch_shardings["tokens"]
-            tok = jax.device_put(
-                jnp.argmax(logits, -1)[:, None].astype(jnp.int32), tok_sh)
-            for t in range(args.gen_len):
-                pos = jnp.int32(args.prompt_len + t)
-                logits, cache = dec.fn(params, cache, {"tokens": tok}, pos)
-                tok = jax.device_put(
-                    jnp.argmax(logits, -1)[:, None].astype(jnp.int32), tok_sh)
-                tokens_out += args.slots
-            last_tok = tok
-            done += n_real
-            if next_wave is not None:
-                n_real = next_real
-        if last_tok is not None:      # honest timing: retire the last wave
-            jax.block_until_ready(last_tok)
-    finally:
-        runtime.shutdown(wait=True)
-    dt = time.time() - t0
-    tps = tokens_out / dt
-    st = runtime.stats()
-    print(f"[serve] {args.requests} requests, {tokens_out} tokens in "
-          f"{dt:.2f}s -> {tps:.1f} tok/s (slots={args.slots}, "
-          f"host tasks {st.completed})")
-    return {"tokens_per_s": tps, "requests": args.requests,
-            "runtime_stats": st.to_json()}
+    plan = plan_from_args(args)
+    with plan.compile() as session:
+        return session.serve(
+            requests=args.requests, prompt_len=args.prompt_len,
+            gen_len=args.gen_len, slots=args.slots)
 
 
-def parser():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-4b", choices=ARCH_IDS)
-    ap.add_argument("--tiny", action="store_true", default=True)
+def parser() -> argparse.ArgumentParser:
+    ap = cli_args()
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=16)
-    ap.add_argument("--data", type=int, default=1)
-    ap.add_argument("--model", type=int, default=1)
-    ap.add_argument("--seed", type=int, default=0)
     return ap
 
 

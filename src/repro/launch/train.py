@@ -1,8 +1,9 @@
-"""Training launcher: the end-to-end driver (deliverable b).
+"""Training launcher: a thin argparse shim over ``frontend.Plan/Session``.
 
-Wires every subsystem together: config registry -> mesh -> strategy ->
-shard_map train step -> synthetic pipeline w/ prefetch -> async checkpoints
--> resilience (replay / replicate / finite-validation) -> restart.
+The loop itself - config -> mesh -> strategy -> shard_map train step ->
+synthetic pipeline w/ prefetch -> async checkpoints -> resilience ->
+restart - lives in ``frontend/plan.py`` (``Session.train``); this module
+only maps flags onto a ``Plan``.
 
 Fault tolerance drill (used by examples/elastic_restart.py and tests):
   * --fail-at-step N     raises mid-run AFTER checkpoints exist (simulated
@@ -20,148 +21,30 @@ Example:
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import time
 
-import jax
-
-from repro.configs import ARCH_IDS, get_config
-from repro.core import steps as steps_lib
-from repro.core.futures import FuturizedGraph, Lane, Pipeline
-from repro.core.resilience import ResilientRunner, StragglerPolicy
-from repro.checkpoint.checkpoint import CheckpointManager
-from repro.data.pipeline import LMStream, Prefetcher
-from repro.launch.mesh import make_local_mesh
-
-
-def build(args):
-    cfg = get_config(args.arch, tiny=args.tiny)
-    if args.tiny:
-        cfg = dataclasses.replace(cfg, remat=args.remat)
-    mesh = make_local_mesh(data=args.data, model=args.model)
-    shape = {"seq_len": args.seq, "global_batch": args.batch, "kind": "train"}
-    strategy = steps_lib.Strategy(
-        name=args.strategy, grad_accum=args.grad_accum,
-        sequence_parallel=args.seq_parallel)
-    step = steps_lib.make_train_step(cfg, mesh, strategy, shape)
-    stream = LMStream(
-        vocab=cfg.vocab, batch=args.batch, seq=args.seq, seed=args.seed,
-        frames_dim=cfg.d_model if cfg.family == "encdec" else 0,
-        frames_len=cfg.enc_frames if cfg.family == "encdec" else 0)
-    return cfg, mesh, step, stream
+from repro.core.steps import Strategy
+from repro.frontend import cli_args, plan_from_args
 
 
 def run(args) -> dict:
-    cfg, mesh, step, stream = build(args)
-    params, opt = step.init(jax.random.PRNGKey(args.seed))
-    start = 0
-
-    # One futurized runtime for every host-side task in the loop: prefetch
-    # nodes (Lane.PREFETCH), metric forcing (Lane.COMPUTE) and checkpoint
-    # I/O (Lane.CHECKPOINT) share its workers; the lane order keeps saves
-    # off the step-critical path.
-    runtime = FuturizedGraph(max_workers=4, name="train")
-    ckpt = (CheckpointManager(args.ckpt, keep=3, graph=runtime)
-            if args.ckpt else None)
-    if ckpt is not None and args.resume:
-        latest = ckpt.latest_step()
-        if latest is not None:
-            start, (params, opt) = ckpt.restore(
-                (params, opt),
-                shardings=(step.param_shardings, step.opt_shardings))
-            print(f"[train] resumed from step {start}")
-
-    prefetch = Prefetcher(stream, step.batch_shardings, graph=runtime)
-    runner = ResilientRunner(step.fn_nodonate)
-    policy = StragglerPolicy(accumulate_local_steps=1)
-    inflight = Pipeline(depth=2)
-    log_futs: list = []
-    t_log = time.time()
-
-    def _force_and_log(it, m, t_start):
-        # Runs on a runtime worker: forcing metrics never stalls dispatch.
-        loss = float(m["loss"])
-        dt = (time.time() - t_start) / args.log_every
-        print(f"[train] step {it + 1:5d} loss {loss:8.4f} "
-              f"gnorm {float(m['grad_norm']):8.3f} "
-              f"{dt * 1e3:8.1f} ms/step", flush=True)
-        return loss
-
-    metrics = None
-    try:
-        for it in range(start, args.steps):
-            batch = prefetch.get(it)
-            if args.fail_at_step is not None and it == args.fail_at_step \
-                    and not args.resume:
-                raise RuntimeError(f"injected node failure at step {it}")
-            if args.resilience == "replay":
-                metrics, params, opt = runner.replay(params, opt, batch)
-            elif args.resilience == "replicate":
-                metrics, params, opt = runner.replicate(params, opt, batch,
-                                                        n=2)
-            else:
-                metrics, params, opt = step.fn(params, opt, batch)
-            inflight.push(it, metrics)
-            if (it + 1) % args.log_every == 0:
-                # CHECKPOINT lane: forcing metrics for logs must never
-                # outrank the PREFETCH nodes the loop blocks on next
-                log_futs.append(runtime.defer(
-                    _force_and_log, it, metrics, t_log,
-                    lane=Lane.CHECKPOINT, name=f"log:{it}"))
-                t_log = time.time()
-            if ckpt is not None and (it + 1) % args.ckpt_every == 0:
-                # The write node depends on step retirement: file I/O starts
-                # only after the step's outputs are resolved on device.
-                retired = runtime.defer(jax.block_until_ready, metrics,
-                                        lane=Lane.CHECKPOINT,
-                                        name=f"retire:{it}")
-                ckpt.save(it + 1, (params, opt), deps=(retired,),
-                          meta={"arch": args.arch})
-        inflight.drain()
-        if ckpt is not None:
-            ckpt.save(args.steps, (params, opt), meta={"arch": args.arch})
-    finally:
-        # Shutdown barrier - also on the injected-failure path, so a crash
-        # never loses a save that was already requested: retire in-flight
-        # steps, land every pending checkpoint node, stop the workers.
-        inflight.drain()
-        prefetch.close()       # cancel batches nobody will consume
-        if ckpt is not None:
-            ckpt.close()
-        runtime.shutdown(wait=True)
-
-    losses = [f.result() for f in log_futs]
-    st = runtime.stats()
-    if metrics is None:      # resumed at/after --steps: nothing left to run
-        print(f"[train] nothing to do: resumed at step {start} "
-              f">= --steps {args.steps}")
-        return {"final_loss": float("nan"), "losses": losses,
-                "params": params, "step": start,
-                "runtime_stats": st.to_json()}
-    final = float(metrics["loss"])
-    print(f"[train] done: final loss {final:.4f} "
-          f"(host tasks {st.completed}, max in-flight {st.max_in_flight})")
-    return {"final_loss": final, "losses": losses,
-            "params": params, "step": args.steps,
-            "runtime_stats": st.to_json()}
+    strategy = Strategy(name=args.strategy, grad_accum=args.grad_accum,
+                        sequence_parallel=args.seq_parallel)
+    plan = plan_from_args(args, strategy=strategy, remat=args.remat)
+    with plan.compile() as session:
+        return session.train(
+            steps=args.steps, ckpt_dir=args.ckpt, ckpt_every=args.ckpt_every,
+            log_every=args.log_every, resume=args.resume,
+            fail_at_step=args.fail_at_step, resilience=args.resilience)
 
 
 def parser() -> argparse.ArgumentParser:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-4b", choices=ARCH_IDS)
-    ap.add_argument("--tiny", action="store_true", default=True)
-    ap.add_argument("--full", dest="tiny", action="store_false")
+    ap = cli_args(seq=64, batch=8)
     ap.add_argument("--steps", type=int, default=50)
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--seq", type=int, default=64)
-    ap.add_argument("--data", type=int, default=1)
-    ap.add_argument("--model", type=int, default=1)
     ap.add_argument("--strategy", default="phylanx",
                     choices=["phylanx", "horovod", "zero1", "onebit"])
     ap.add_argument("--grad-accum", type=int, default=1)
     ap.add_argument("--seq-parallel", action="store_true")
     ap.add_argument("--remat", action="store_true")
-    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--log-every", type=int, default=5)
