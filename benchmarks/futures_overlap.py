@@ -21,9 +21,20 @@ With ``--load-ms 0`` the workload degenerates to pure-compute on an
 already-saturated CPU device; there is nothing to hide and the runtime's
 job is merely to not get in the way.
 
-    PYTHONPATH=src python benchmarks/futures_overlap.py [--steps 40]
+``--localities N`` (N > 1) adds a *multi-locality* variant: the same
+futurized loop, but batch builds run on N-1 worker processes via the
+active-message runtime (`repro.distrib`) and stream back as futures
+resolve.  The storage-latency sleep then burns in another process - true
+overlap across the wire, bought at the cost of shipping each batch back
+(the printed wire bytes).  This quantifies the paper's claim that the
+futurized tree survives distribution.
 
-Exits non-zero if the futurized loop is slower than the serial loop.
+    PYTHONPATH=src python benchmarks/futures_overlap.py [--steps 40]
+    PYTHONPATH=src python benchmarks/futures_overlap.py --localities 2
+
+Exits non-zero if the futurized loop is slower than the serial loop (the
+distributed variant is informative, not gating: wire cost vs load-ms is
+a real trade, not a regression).
 """
 import argparse
 import sys
@@ -113,6 +124,41 @@ def futurized_loop(step, params, stream, steps, ckpt_dir, ckpt_every) -> tuple:
     return dt, stats
 
 
+def distributed_loop(step, params, stream, steps, ckpt_dir, ckpt_every,
+                     localities) -> tuple:
+    """The futurized loop with batch builds placed on worker localities:
+    ``Prefetcher(dgraph=...)`` ships ``stream.batch_at`` across the wire
+    and the results stream back as the loop's prefetch futures."""
+    from repro.distrib import DistributedGraph
+
+    runtime = FuturizedGraph(max_workers=4, name="bench-distrib")
+    dgraph = DistributedGraph(localities=localities, graph=runtime,
+                              name="bench")
+    prefetch = Prefetcher(stream, shardings=None, depth=2, graph=runtime,
+                          dgraph=dgraph)
+    ckpt = CheckpointManager(ckpt_dir, graph=runtime)
+    inflight = Pipeline(depth=2)
+    t0 = time.perf_counter()
+    for it in range(steps):
+        batch = prefetch.get(it)
+        out = step(params, batch)
+        inflight.push(it, out)
+        if (it + 1) % ckpt_every == 0:
+            retired = runtime.defer(jax.block_until_ready, out,
+                                    lane=Lane.CHECKPOINT,
+                                    name=f"retire:{it}")
+            ckpt.save(it + 1, params, deps=(retired,))
+    inflight.drain()
+    ckpt.wait()
+    dgraph.barrier()
+    runtime.barrier()
+    dt = time.perf_counter() - t0
+    dstats = dgraph.stats()
+    dgraph.shutdown()
+    runtime.shutdown(wait=True)
+    return dt, dstats
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=40)
@@ -122,6 +168,9 @@ def main():
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--load-ms", type=float, default=25.0)
     ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--localities", type=int, default=1,
+                    help="> 1 adds the multi-locality variant (N-1 worker "
+                         "processes build batches over the wire)")
     args = ap.parse_args()
 
     step, params = make_step(args.vocab, args.d)
@@ -131,17 +180,29 @@ def main():
     # warm the jit cache + stream codepaths outside both timed regions
     jax.block_until_ready(step(params, stream.batch_at(0)))
 
+    t_dist = dstats = None
     with tempfile.TemporaryDirectory() as d1, \
-            tempfile.TemporaryDirectory() as d2:
+            tempfile.TemporaryDirectory() as d2, \
+            tempfile.TemporaryDirectory() as d3:
         t_serial = serial_loop(step, params, stream, args.steps, d1,
                                args.ckpt_every)
         t_fut, stats = futurized_loop(step, params, stream, args.steps, d2,
                                       args.ckpt_every)
+        if args.localities > 1:
+            t_dist, dstats = distributed_loop(
+                step, params, stream, args.steps, d3, args.ckpt_every,
+                args.localities)
 
     ms = 1e3 / args.steps
     print(f"serial    : {t_serial:7.3f}s  ({t_serial * ms:6.1f} ms/step)")
     print(f"futurized : {t_fut:7.3f}s  ({t_fut * ms:6.1f} ms/step)")
     print(f"speedup   : {t_serial / t_fut:7.2f}x")
+    if t_dist is not None:
+        print(f"distrib   : {t_dist:7.3f}s  ({t_dist * ms:6.1f} ms/step) "
+              f"x{args.localities} localities")
+        print(f"wire      : dispatched={dict(dstats['dispatched'])} "
+              f"sent={dstats['bytes_sent']}B recv={dstats['bytes_recv']}B "
+              f"respawned={dstats['respawned']}")
     print(f"runtime   : tasks={stats.completed} "
           f"max_in_flight={stats.max_in_flight} "
           f"idle={stats.idle_s:.2f}s busy={stats.busy_s:.2f}s "

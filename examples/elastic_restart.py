@@ -1,9 +1,16 @@
-"""Elastic restart: checkpoint on one mesh, resume on a DIFFERENT mesh.
+"""Elastic restart: checkpoint on one mesh, resume on a DIFFERENT mesh -
+and survive losing a worker LOCALITY without restarting at all.
 
 Phase 1 trains on (data=2, model=2); phase 2 restores the same checkpoint
 onto (data=4, model=1) - checkpoint resharding makes the cluster size an
 execution detail, which is the paper's architecture-agnostic requirement
 applied to fault tolerance / elasticity.
+
+Phase 3 goes one step further with the multi-locality runtime (DESIGN.md
+§9): a 2-process run where one worker locality is SIGKILLed mid-run.  Its
+in-flight tasks are re-spawned on a surviving locality, so training
+finishes WITHOUT the checkpoint round-trip phases 1-2 needed - locality
+loss degrades capacity, not correctness.
 
     PYTHONPATH=src python examples/elastic_restart.py
 """
@@ -40,6 +47,11 @@ def main():
     print("=== phase 2: resume the SAME checkpoint on (data=4, model=1) ===")
     run_phase(4, 1, 40, ["--resume"])
     print("elastic restart complete: params were resharded onto a new mesh")
+    print("=== phase 3: 2 localities, worker SIGKILLed at step 20 ===")
+    shutil.rmtree(CKPT, ignore_errors=True)
+    run_phase(4, 1, 40, ["--localities", "2",
+                         "--kill-locality-at-step", "20"])
+    print("locality loss survived in-run: tasks re-spawned, no restart")
 
 
 if __name__ == "__main__":

@@ -7,9 +7,13 @@
     latest checkpoint ON THE SAME SESSION (the fault-tolerance drill)
 
 Scale knobs: larger --steps trains longer; the default trains the reduced
-config on CPU.
+config on CPU.  ``--localities N`` runs the same loop with batch builds
+on N-1 worker processes (the multi-locality runtime, DESIGN.md §9) -
+the loss trajectory is identical because distribution changes where
+host work runs, never what it computes.
 
     PYTHONPATH=src python examples/train_lm_ddp.py [--steps 200]
+    PYTHONPATH=src python examples/train_lm_ddp.py --localities 2
 """
 import os
 
@@ -27,11 +31,13 @@ def main(argv=None):
     ap.add_argument("--steps", type=int, default=120)
     ap.add_argument("--arch", default="qwen2.5-3b")
     ap.add_argument("--ckpt", default="/tmp/phyrax_ddp_ckpt")
+    ap.add_argument("--localities", type=int, default=1)
     args, _ = ap.parse_known_args(argv)
 
     every = max(5, args.steps // 5)   # checkpoints exist before the failure
     plan = Plan(arch=args.arch, tiny=True, data=4, model=2,
-                batch=16, seq=64, strategy=Strategy(name="phylanx"))
+                batch=16, seq=64, strategy=Strategy(name="phylanx"),
+                localities=args.localities)
     with plan.compile() as session:
         print("=== phase 1: train until an injected node failure ===")
         try:

@@ -24,6 +24,10 @@ runtime:
   * Ready tasks are drained by priority *lane*: compute dispatch beats
     prefetch beats checkpoint I/O, so background saves never delay the
     step-critical path.
+  * ``promise`` creates an *externally resolved* node (HPX's promise):
+    the distributed layer (``repro.distrib``) fulfils it when a result
+    frame arrives from another locality, and the usual edge propagation
+    takes over from there.
   * ``stats()`` reports tasks run / failed / cancelled, max in-flight, and
     worker idle time - the observability hook the benchmarks read.
 
@@ -49,7 +53,7 @@ import jax
 
 __all__ = [
     "CancelledError", "FuturizedGraph", "HIST_EDGES_S", "InFlight", "Lane",
-    "PhyFuture", "Pipeline", "RuntimeStats", "TaskState",
+    "PhyFuture", "Pipeline", "RuntimeStats", "TaskState", "hist_labels",
 ]
 
 
@@ -89,9 +93,38 @@ def _fmt_s(s: float) -> str:
     return f"{s:g}s"
 
 
+def hist_labels() -> list[str]:
+    """Human-readable bucket names for ``HIST_EDGES_S``: ``"<100us"`` ...
+    ``">=1s"`` - one label per histogram cell, last bucket open-ended."""
+    return ([f"<{_fmt_s(e)}" for e in HIST_EDGES_S]
+            + [f">={_fmt_s(HIST_EDGES_S[-1])}"])
+
+
 @dataclasses.dataclass
 class RuntimeStats:
-    """Counters for one ``FuturizedGraph``; read via ``graph.stats()``."""
+    """Counters for one ``FuturizedGraph``; read via ``graph.stats()``.
+
+    ``to_json()`` schema::
+
+        {
+          "submitted" | "completed" | "failed" | "cancelled": int,
+          "max_in_flight": int,          # peak concurrently-RUNNING tasks
+          "idle_s" | "busy_s": float,    # summed worker wall time
+          "per_lane": {lane: int},       # completions per Lane name
+          "lane_time_hist": {
+            "edges_s": [1e-4, 1e-3, 1e-2, 1e-1, 1.0],   # bucket edges (s)
+            "labels": ["<100us", "<1ms", "<10ms", "<100ms", "<1s", ">=1s"],
+            "counts": {lane: [int] * 6},  # counts[i] tasks in labels[i]
+          },
+        }
+
+    A task of duration ``d`` lands in the first bucket whose edge exceeds
+    ``d``; the last bucket is open-ended.  For scheduler-run tasks the
+    ``counts`` row sums equal the lane's ``per_lane`` completion count.
+    Nodes with no local duration are the exceptions: ``promise`` nodes
+    (e.g. cross-process results) count in ``per_lane`` but not in the
+    histogram, and ``immediate`` values count in ``submitted``/
+    ``completed`` only."""
     submitted: int = 0
     completed: int = 0
     failed: int = 0
@@ -112,8 +145,7 @@ class RuntimeStats:
 
     def hist_lines(self) -> list[str]:
         """Human-readable per-lane wall-time histograms (non-empty lanes)."""
-        labels = ([f"<{_fmt_s(e)}" for e in HIST_EDGES_S]
-                  + [f">={_fmt_s(HIST_EDGES_S[-1])}"])
+        labels = hist_labels()
         lines = []
         for lane, counts in self.lane_hist.items():
             if not sum(counts):
@@ -124,9 +156,13 @@ class RuntimeStats:
         return lines
 
     def to_json(self) -> dict:
+        """Serialize to the documented schema (see the class docstring);
+        the histogram buckets carry their edges *and* labels so downstream
+        reports never have to hard-code them."""
         out = dataclasses.asdict(self)
         hist = out.pop("lane_hist")
         out["lane_time_hist"] = {"edges_s": list(HIST_EDGES_S),
+                                 "labels": hist_labels(),
                                  "counts": hist}
         return out
 
@@ -138,20 +174,25 @@ def _is_future(x) -> bool:
 class PhyFuture:
     """A node of the futurized execution tree.
 
-    Created by ``FuturizedGraph.defer`` (and the combinators), never
-    directly.  ``result()`` blocks the *caller*; the runtime itself only
-    ever runs a node once every input has resolved.
+    Created by ``FuturizedGraph.defer`` / ``promise`` (and the
+    combinators), never directly.  ``result()`` blocks the *caller*; the
+    runtime itself only ever runs a node once every input has resolved.
+
+    ``home`` is the locality rank a node's work was placed on by the
+    distributed layer (``repro.distrib``); ``None`` for purely local
+    nodes.  Placement reads it for data affinity.
     """
 
-    __slots__ = ("_graph", "name", "lane", "_fn", "_args", "_kwargs",
-                 "_state", "_value", "_exc", "_ndeps", "_dependents",
-                 "_callbacks", "_seq")
+    __slots__ = ("_graph", "name", "lane", "home", "_fn", "_args",
+                 "_kwargs", "_state", "_value", "_exc", "_ndeps",
+                 "_dependents", "_callbacks", "_seq", "_promise")
 
     def __init__(self, graph: "FuturizedGraph", fn: Optional[Callable],
                  args, kwargs, *, lane: Lane, name: str, seq: int):
         self._graph = graph
         self.name = name
         self.lane = lane
+        self.home: Optional[int] = None
         self._fn = fn
         self._args = args
         self._kwargs = kwargs
@@ -162,6 +203,7 @@ class PhyFuture:
         self._dependents: list[PhyFuture] = []
         self._callbacks: list[Callable[["PhyFuture"], None]] = []
         self._seq = seq
+        self._promise = False
 
     # -- inspection ---------------------------------------------------------
     @property
@@ -203,6 +245,47 @@ class PhyFuture:
         if fire:
             cb(self)
 
+    # -- external resolution (promise nodes only) ---------------------------
+    def set_result(self, value) -> bool:
+        """Resolve a ``FuturizedGraph.promise`` node with ``value``.
+
+        Returns:
+            True if this call resolved the node; False if it was already
+            terminal (e.g. cancelled locally while the work was remote -
+            late results are discarded, not an error).
+        Raises:
+            RuntimeError: on a non-promise node, whose value is owned by
+                the scheduler.
+        """
+        if not self._promise:
+            raise RuntimeError(f"{self.name!r} is not a promise node")
+        with self._graph._lock:
+            if self.done():
+                return False
+            self._graph._complete_locked(self, value=value)
+            return True
+
+    def set_exception(self, exc: BaseException, *,
+                      cancelled: bool = False) -> bool:
+        """Poison a ``FuturizedGraph.promise`` node (and, via the normal
+        edge propagation, its transitive dependents) with ``exc``.
+
+        Args:
+            exc: the exception ``result()`` will raise.
+            cancelled: record the node as CANCELLED rather than ERROR.
+        Returns:
+            True if this call poisoned the node; False if already terminal.
+        Raises:
+            RuntimeError: on a non-promise node.
+        """
+        if not self._promise:
+            raise RuntimeError(f"{self.name!r} is not a promise node")
+        with self._graph._lock:
+            if self.done():
+                return False
+            self._graph._fail_locked(self, exc, cancelled=cancelled)
+            return True
+
     def __repr__(self):
         return f"<PhyFuture {self.name!r} {self._state.value} lane={self.lane.name}>"
 
@@ -242,7 +325,22 @@ class FuturizedGraph:
         """Add a node running ``fn`` once every ``PhyFuture`` found (by
         pytree traversal) in ``args``/``kwargs`` has resolved.  Non-future
         leaves - including device arrays, which are already async under JAX
-        - pass through untouched."""
+        - pass through untouched.
+
+        Args:
+            fn: host callable; runs on a worker thread with every future
+                in its arguments replaced by that future's value.
+            *args, **kwargs: arguments, searched for ``PhyFuture`` leaves
+                by pytree traversal - each becomes a dependency edge.
+            lane: priority lane the node drains in once READY.
+            name: display name (defaults to ``fn.__name__``).
+        Returns:
+            The node's ``PhyFuture``.  If a dependency has already
+            errored/cancelled, the node is created pre-poisoned.
+        Raises:
+            ValueError: a dependency belongs to a different graph.
+            RuntimeError: the graph has been shut down.
+        """
         deps = [x for x in jax.tree.leaves((args, kwargs), is_leaf=_is_future)
                 if _is_future(x)]
         for d in deps:   # validate before touching any graph state
@@ -288,6 +386,35 @@ class FuturizedGraph:
         self._notify_trace(node, ())
         return node
 
+    def promise(self, *, name: str = "promise",
+                lane: Lane = Lane.COMPUTE) -> PhyFuture:
+        """An *externally resolved* node: HPX's promise.
+
+        The returned future never runs on a worker; whoever holds it calls
+        ``set_result`` / ``set_exception`` when the out-of-graph work (a
+        result frame from another locality, an external callback) lands.
+        Dependents hang edges off it exactly as off a deferred node, and
+        ``barrier``/``shutdown`` wait for it, so an unresolved promise
+        must always be fulfilled or poisoned by its creator.
+
+        Args:
+            name: display name.
+            lane: lane recorded for stats/affinity (never scheduled).
+        Returns:
+            A PENDING ``PhyFuture`` resolvable from outside the graph.
+        Raises:
+            RuntimeError: the graph has been shut down.
+        """
+        with self._lock:
+            if self._closed:
+                raise RuntimeError(f"graph {self.name!r} is shut down")
+            node = PhyFuture(self, None, (), {}, lane=lane, name=name,
+                             seq=next(self._seq))
+            node._promise = True
+            self._stats.submitted += 1
+            self._unfinished += 1
+        return node
+
     # -- tracing hooks ------------------------------------------------------
     def add_trace_hook(self, cb: Callable[[PhyFuture, tuple], None]
                        ) -> Callable[[], None]:
@@ -321,7 +448,16 @@ class FuturizedGraph:
     def when_all(self, futures: Sequence[PhyFuture], *,
                  lane: Lane = Lane.COMPUTE, name: str = "when_all"
                  ) -> PhyFuture:
-        """Future of the list of results; errors/cancellations propagate."""
+        """Future of the list of results, in input order.
+
+        Args:
+            futures: the inputs; an empty sequence resolves immediately
+                with ``[]``.
+            lane, name: as for ``defer``.
+        Returns:
+            A future of ``[f.result() for f in futures]``; any input's
+            error or cancellation propagates to it (and onward).
+        """
         futures = list(futures)
         return self.defer(lambda *vs: list(vs), *futures, lane=lane,
                           name=name)
@@ -329,7 +465,15 @@ class FuturizedGraph:
     def when_any(self, futures: Sequence[PhyFuture], *, name: str = "when_any"
                  ) -> PhyFuture:
         """Resolves with ``(index, value)`` of the first future to complete
-        successfully; errors only if *every* input fails or is cancelled."""
+        successfully; errors only if *every* input fails or is cancelled.
+
+        Args:
+            futures: non-empty sequence of candidate futures.
+        Returns:
+            A future of ``(index, value)`` for the first success.
+        Raises:
+            ValueError: ``futures`` is empty.
+        """
         futures = list(futures)
         if not futures:
             raise ValueError("when_any of no futures")
@@ -360,8 +504,17 @@ class FuturizedGraph:
 
     def tree_join(self, tree: Any, *, lane: Lane = Lane.COMPUTE,
                   name: str = "tree_join") -> PhyFuture:
-        """Pytree-of-futures -> future-of-pytree (the tree of futures):
-        resolves once every ``PhyFuture`` leaf anywhere in ``tree`` has."""
+        """Pytree-of-futures -> future-of-pytree (the tree of futures).
+
+        Args:
+            tree: any pytree; ``PhyFuture`` leaves become edges, other
+                leaves pass through untouched.
+            lane, name: as for ``defer``.
+        Returns:
+            A future of ``tree`` with every future leaf replaced by its
+            value, resolved once the last leaf resolves; leaf errors and
+            cancellations propagate.
+        """
         leaves, treedef = jax.tree.flatten(tree, is_leaf=_is_future)
         futs = [(i, x) for i, x in enumerate(leaves) if _is_future(x)]
 

@@ -9,6 +9,12 @@ checksums used by restart-based fault tolerance (node loss).
 
 SDC cannot be produced on demand, so tests inject faults through the
 ``fault_hook`` seam - the detection/recovery logic is identical either way.
+
+Across process boundaries the same primitives back the multi-locality
+runtime (DESIGN.md §9): ``repro.distrib.DistributedGraph.replicate`` runs
+replicas on *distinct localities* and votes with ``tree_checksum``, and a
+killed locality's idempotent tasks are re-spawned on survivors - replay,
+at the placement layer.
 """
 from __future__ import annotations
 

@@ -2,7 +2,9 @@
 
 Unified into the framework (paper R6): batches come out already placed with
 the step's batch shardings, prefetched on a background thread so host data
-work overlaps device compute (R3 at the input edge).
+work overlaps device compute (R3 at the input edge).  Under the
+multi-locality runtime (DESIGN.md §9) the build half of each prefetch
+moves to a worker process and streams back; placement stays local.
 
 Synthetic LM stream: a noisy affine bigram process
     x_{t+1} = (a * x_t + b) mod V   with prob (1 - noise), else uniform
@@ -86,31 +88,60 @@ class Prefetcher:
     built on a worker while step runs on device, then device_put with the
     step's shardings (arrives already tiled).  Each outstanding batch is a
     ``Lane.PREFETCH`` node, so on a shared runtime prefetch yields to
-    step-critical compute but beats checkpoint I/O."""
+    step-critical compute but beats checkpoint I/O.
+
+    With ``dgraph`` (a ``repro.distrib.DistributedGraph``) the host build
+    moves to a *worker locality*: ``stream.batch_at`` - which must then
+    be picklable, as every registry stream is - runs in another process
+    and streams the raw batch back, while the ``device_put`` placement
+    stays on the driver (device state never crosses the wire).  The
+    local node keeps the ``prefetch:{s}`` name, so consumers and traces
+    are unchanged by distribution.
+
+    Trade-off, deliberate: the bound method ships the stream object with
+    every build, which keeps builds round-robining over *all* workers
+    (registry streams are a few scalars, so the per-build cost is noise).
+    A stream with heavy state should instead be pinned once
+    (``dgraph.defer(make_stream, pin=True)``) and consumed via a
+    module-level ``build(stream_ref, step)`` - ref affinity then keeps
+    every build on the owning worker and only gids cross the wire."""
 
     def __init__(self, stream, shardings: Optional[dict] = None,
-                 depth: int = 2, graph: Optional[FuturizedGraph] = None):
+                 depth: int = 2, graph: Optional[FuturizedGraph] = None,
+                 dgraph: Optional[Any] = None):
         self.stream = stream
         self.shardings = shardings
         self._own_graph = graph is None
         self.graph = graph if graph is not None else FuturizedGraph(
             max_workers=2, name="prefetch")
+        self.dgraph = dgraph
         self._futs: dict[int, Any] = {}
         self.depth = depth
 
-    def _make(self, step: int):
-        b = self.stream.batch_at(step)
+    def _place(self, b: dict):
         if self.shardings:
             b = {k: jax.device_put(v, self.shardings.get(k))
                  for k, v in b.items()}
         return b
 
+    def _make(self, step: int):
+        return self._place(self.stream.batch_at(step))
+
     def schedule(self, step: int):
         """Ensure batches [step, step+depth) are in flight as graph nodes."""
         for s in range(step, step + self.depth):
             if s not in self._futs:
-                self._futs[s] = self.graph.defer(
-                    self._make, s, lane=Lane.PREFETCH, name=f"prefetch:{s}")
+                if self.dgraph is not None:
+                    built = self.dgraph.defer(
+                        self.stream.batch_at, s, lane=Lane.PREFETCH,
+                        name=f"build:{s}")
+                    self._futs[s] = self.graph.defer(
+                        self._place, built, lane=Lane.PREFETCH,
+                        name=f"prefetch:{s}")
+                else:
+                    self._futs[s] = self.graph.defer(
+                        self._make, s, lane=Lane.PREFETCH,
+                        name=f"prefetch:{s}")
 
     def get_future(self, step: int):
         """The batch's future - lets a consumer depend on it by edge

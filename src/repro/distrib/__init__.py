@@ -1,0 +1,14 @@
+"""Multi-locality runtime (DESIGN.md §9): execute the futurized graph
+across processes.  ``messaging`` is the TCP active-message (parcel)
+layer, ``agas`` the global object directory, ``runtime`` the
+``Locality``/``DistributedGraph`` scheduler that places tasks by lane +
+data affinity and streams results back as futures resolve."""
+from .agas import ObjectDirectory, RemoteRef  # noqa: F401
+from .messaging import Endpoint, PeerLostError  # noqa: F401
+from .runtime import (DistributedGraph, Locality,  # noqa: F401
+                      LocalityGroup, LocalityLostError, RemoteTaskError,
+                      worker_main)
+
+__all__ = ["DistributedGraph", "Endpoint", "Locality", "LocalityGroup",
+           "LocalityLostError", "ObjectDirectory", "PeerLostError",
+           "RemoteRef", "RemoteTaskError", "worker_main"]

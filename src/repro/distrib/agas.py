@@ -1,0 +1,155 @@
+"""AGAS-style object directory: global ids for locality-owned values.
+
+HPX's Active Global Address Space names every distributed object with a
+global id (gid) and resolves gids to owning localities, so tasks can be
+co-located with their data instead of the data moving to the task.  The
+analogue here (DESIGN.md §9):
+
+  * a ``gid`` is ``(owner_rank, index)`` - ownership is encoded in the
+    id itself, so resolution is a tuple read, never a lookup round-trip
+    (a deliberate simplification of full AGAS, which also supports
+    migration; we do not migrate, we re-create - see the failure model);
+  * ``ObjectDirectory.put`` registers a value owned by this locality and
+    returns a ``RemoteRef`` others can hold, ship, or deref;
+  * ``fetch`` resolves a ref: a local dictionary hit when this locality
+    owns it, one active-message request (``agas_fetch``) otherwise;
+  * the distributed scheduler uses ref ownership for *data affinity*:
+    a task whose arguments hold refs is placed on the majority owner,
+    where every deref is local.
+
+Pinned task results (``DistributedGraph.defer(..., pin=True)``) live
+here: the worker keeps the value and streams back only the ref, so a
+consumer chain touring one locality never ships intermediates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+from typing import Any, Optional
+
+import numpy as np
+
+from .messaging import Endpoint
+
+__all__ = ["ObjectDirectory", "RemoteRef"]
+
+
+def _nbytes(value: Any) -> int:
+    """Rough payload size: summed array bytes over the value's leaves
+    (used for reporting only, never for correctness)."""
+    import jax
+
+    total = 0
+    for leaf in jax.tree.leaves(value):
+        if isinstance(leaf, np.ndarray) or hasattr(leaf, "nbytes"):
+            total += int(getattr(leaf, "nbytes", 0))
+    return total
+
+
+@dataclasses.dataclass(frozen=True)
+class RemoteRef:
+    """A global name for a value owned by one locality.
+
+    Ships freely over the wire (it is just the id plus bookkeeping);
+    holding a ref does not keep the owner alive.  Deref via
+    ``ObjectDirectory.fetch`` or by passing it as an argument to a
+    distributed task - the worker dereferences refs before calling the
+    task function.
+    """
+    gid: tuple[int, int]        # (owner_rank, index)
+    nbytes: int = 0
+    summary: str = ""
+
+    @property
+    def owner(self) -> int:
+        """Rank of the owning locality (encoded in the gid)."""
+        return self.gid[0]
+
+    def __repr__(self):
+        return (f"<RemoteRef {self.gid[0]}:{self.gid[1]} "
+                f"{self.summary or 'value'} ~{self.nbytes}B>")
+
+
+class ObjectDirectory:
+    """This locality's slice of the global address space.
+
+    Args:
+        rank: owning locality rank, baked into every gid issued here.
+        endpoint: active-message endpoint; ``agas_fetch``/``agas_free``
+            handlers are registered on it so any peer can deref/free.
+    """
+
+    def __init__(self, rank: int, endpoint: Optional[Endpoint] = None):
+        self.rank = rank
+        self.endpoint = endpoint
+        self._store: dict[int, Any] = {}
+        self._lock = threading.Lock()
+        self._counter = itertools.count()
+        if endpoint is not None:
+            endpoint.register("agas_fetch", self._on_fetch)
+            endpoint.register("agas_free", self._on_free)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._store)
+
+    # -- registration -------------------------------------------------------
+    def put(self, value: Any, *, summary: str = "") -> RemoteRef:
+        """Register ``value`` as owned by this locality.
+
+        Returns:
+            A ``RemoteRef`` naming it globally; the value stays here
+            until ``free``d or the locality shuts down.
+        """
+        with self._lock:
+            idx = next(self._counter)
+            self._store[idx] = value
+        return RemoteRef(gid=(self.rank, idx), nbytes=_nbytes(value),
+                         summary=summary)
+
+    # -- resolution ---------------------------------------------------------
+    def fetch(self, ref: RemoteRef, *, timeout: float = 60.0) -> Any:
+        """Deref: local dictionary hit when owned here, one
+        ``agas_fetch`` round-trip to the owner otherwise.
+
+        Raises:
+            KeyError: the gid was never registered or already freed.
+            PeerLostError: the owning locality is gone (its values die
+                with it - the failure model's re-create-not-migrate rule).
+        """
+        owner, idx = ref.gid
+        if owner == self.rank:
+            with self._lock:
+                if idx not in self._store:
+                    raise KeyError(f"gid {ref.gid} not in directory")
+                return self._store[idx]
+        if self.endpoint is None:
+            raise KeyError(f"gid {ref.gid} is remote and this directory "
+                           f"has no endpoint")
+        return self.endpoint.request(owner, "agas_fetch", list(ref.gid),
+                                     timeout=timeout)
+
+    def free(self, ref: RemoteRef):
+        """Drop the value behind ``ref`` (idempotent; remote owners get
+        a fire-and-forget ``agas_free``)."""
+        owner, idx = ref.gid
+        if owner == self.rank:
+            with self._lock:
+                self._store.pop(idx, None)
+        elif self.endpoint is not None:
+            self.endpoint.post(owner, "agas_free", list(ref.gid))
+
+    # -- handlers ------------------------------------------------------------
+    def _on_fetch(self, src: int, gid) -> Any:
+        _, idx = gid
+        with self._lock:
+            if idx not in self._store:
+                raise KeyError(f"gid {tuple(gid)} not in directory of "
+                               f"locality {self.rank}")
+            return self._store[idx]
+
+    def _on_free(self, src: int, gid):
+        _, idx = gid
+        with self._lock:
+            self._store.pop(idx, None)

@@ -29,6 +29,9 @@ def cli_args(ap: Optional[argparse.ArgumentParser] = None, *,
     if mesh:
         ap.add_argument("--data", type=int, default=1)
         ap.add_argument("--model", type=int, default=1)
+        ap.add_argument("--localities", type=int, default=1,
+                        help="total process count for the multi-locality "
+                             "runtime (1 = in-process)")
     if seq is not None:
         ap.add_argument("--seq", type=int, default=seq)
     if batch is not None:
@@ -43,7 +46,7 @@ def plan_from_args(args, **overrides) -> Plan:
     (e.g. a full ``strategy=Strategy(...)``) win over parsed flags."""
     fields = {name: getattr(args, name)
               for name in ("arch", "tiny", "data", "model", "batch", "seq",
-                           "seed")
+                           "seed", "localities")
               if hasattr(args, name)}
     fields.update(overrides)
     return Plan(**fields)

@@ -94,6 +94,15 @@ def futurize(fn: Optional[Callable] = None, *, lane: Lane = Lane.COMPUTE,
     Inside ``tracing()`` each call defers onto the active graph and returns
     a ``PhyFuture`` (composable with ``when_all`` / ``tree_join`` and any
     other deferred work); outside, the call runs inline.
+
+    Args:
+        fn: the function to wrap (or None when used as ``@futurize(...)``
+            with keyword arguments).
+        lane: priority lane its nodes ride.
+        name: per-trace node name base (default ``fn.__name__``); calls
+            become ``name:0``, ``name:1``, ... within a trace.
+    Returns:
+        The wrapped function (original accessible as ``__futurized__``).
     """
     if fn is None:
         return functools.partial(futurize, lane=lane, name=name)

@@ -43,16 +43,39 @@ ICI_LINKS = 3
 HBM_BYTES = 16e9
 
 
+def _stack_wave(wave):
+    """Host prep of one serve wave (module-level: ships to a worker
+    locality by reference when ``plan.localities > 1``)."""
+    return np.stack(wave)
+
+
 @dataclasses.dataclass(frozen=True)
 class Plan:
     """Declarative run description: arch + mesh axes + strategy + shapes.
 
-    ``strategy`` accepts a ``core.steps.Strategy`` or a bare name
-    ("phylanx" | "horovod" | "zero1" | "onebit").  ``shape`` optionally
-    names a cell of ``configs.SHAPES`` (the dry-run path); otherwise
-    ``seq``/``batch`` define the shape per kind.  ``mesh`` is "local"
-    (``data``/``model``/``pod`` axis sizes over host devices) or
-    "single"/"multipod" (the production 256/512-chip meshes).
+    A frozen value - building one touches no device state; compile it
+    with ``compile()`` to get a runnable ``Session``.
+
+    Fields:
+        arch: architecture id from ``configs.ARCH_IDS``.
+        tiny: use the reduced smoke-scale config.
+        data, model, pod: local mesh axis sizes (``mesh="local"``).
+        mesh: "local" (axis sizes over host devices) or "single" /
+            "multipod" (the production 256/512-chip meshes).
+        strategy: a ``core.steps.Strategy`` or a bare name
+            ("phylanx" | "horovod" | "zero1" | "onebit").
+        batch, seq: global batch and sequence length when no named
+            ``shape`` is given.
+        seed: PRNG seed for params and synthetic streams.
+        shape: optionally a named cell of ``configs.SHAPES`` (dry-run).
+        remat: enable rematerialization on tiny configs.
+        localities: total process count for the multi-locality runtime
+            (DESIGN.md §9).  1 runs everything in-process; N > 1 spawns
+            N-1 worker localities at ``compile()`` and host-side graph
+            nodes (prefetch builds, serve wave prep) are placed on them
+            by lane + data affinity.  Device dispatch stays on the
+            driver either way.
+        overrides: config field overrides applied last.
     """
     arch: str = "qwen3-4b"
     tiny: bool = True
@@ -66,6 +89,7 @@ class Plan:
     seed: int = 0
     shape: Optional[str] = None          # named SHAPES cell (dryrun)
     remat: bool = False
+    localities: int = 1                  # processes incl. the driver
     overrides: dict = dataclasses.field(default_factory=dict)
 
     # -- resolution ---------------------------------------------------------
@@ -103,13 +127,27 @@ class Plan:
                 shape if shape is not None else self.shape_of(kind))
 
     def compile(self) -> "Session":
+        """Build the runnable ``Session`` for this plan (makes the mesh,
+        spawns worker localities when ``localities > 1``).
+
+        Returns:
+            A ``Session``; use it as a context manager so the shutdown
+            barrier (and worker teardown) always runs.
+        """
         return Session(self)
 
 
 class Session:
     """Compiled form of a ``Plan``: mesh + strategy + lazily-built step
     functions, and one futurized runtime for every host-side task.  Use as
-    a context manager (or call ``close()``) to run the shutdown barrier."""
+    a context manager (or call ``close()``) to run the shutdown barrier.
+
+    With ``plan.localities > 1`` the session also owns a
+    ``repro.distrib.DistributedGraph`` (``self.distributed``): worker
+    localities are spawned here and host-side nodes are transparently
+    placed on them; ``close()`` drains the distributed graph before the
+    local shutdown barrier, so worker teardown never strands a promise.
+    """
 
     def __init__(self, plan: Plan, *, max_workers: int = 4):
         self.plan = plan
@@ -118,14 +156,24 @@ class Session:
         self.strategy = plan.build_strategy()
         self.runtime = FuturizedGraph(max_workers=max_workers,
                                       name=f"session:{plan.arch}")
+        self.distributed = None
+        if plan.localities > 1:
+            from ..distrib import DistributedGraph
+            self.distributed = DistributedGraph(
+                localities=plan.localities, graph=self.runtime,
+                name=f"session:{plan.arch}")
         self._train_step = None
         self._serve_steps: dict[tuple, tuple] = {}
         self._closed = False
 
     # -- lifecycle ----------------------------------------------------------
     def close(self):
+        """Run the shutdown barrier: drain distributed tasks, stop worker
+        localities, then drain and stop the local runtime.  Idempotent."""
         if not self._closed:
             self._closed = True
+            if self.distributed is not None:
+                self.distributed.shutdown(wait=True)
             self.runtime.shutdown(wait=True)
 
     def __enter__(self) -> "Session":
@@ -135,7 +183,25 @@ class Session:
         self.close()
 
     def stats(self):
+        """The session runtime's ``RuntimeStats`` (see its docstring for
+        the ``to_json`` schema)."""
         return self.runtime.stats()
+
+    def kill_locality(self, rank: Optional[int] = None) -> Optional[int]:
+        """Failure drill: SIGKILL a worker locality (the highest-ranked
+        alive one by default).  Its in-flight tasks re-spawn elsewhere.
+
+        Returns:
+            The killed rank, or None when no worker locality is alive.
+        """
+        if self.distributed is None:
+            return None
+        alive = self.distributed.group.alive_workers()
+        if not alive:
+            return None
+        rank = alive[-1] if rank is None else rank
+        self.distributed.group.kill(rank)
+        return rank
 
     # -- steps --------------------------------------------------------------
     @property
@@ -165,12 +231,42 @@ class Session:
     def train(self, stream=None, *, steps: int = 50, hooks: Any = None,
               ckpt_dir: str = "", ckpt_every: int = 20, log_every: int = 5,
               resume: bool = False, fail_at_step: Optional[int] = None,
+              kill_locality_at_step: Optional[int] = None,
               resilience: str = "none", verbose: bool = True) -> dict:
         """The training loop the old ``launch/train.py`` hand-wired: stream
         -> prefetch nodes -> step -> in-flight pipeline -> async checkpoint
-        nodes, all on the session runtime.  ``hooks`` is any object with
-        optional ``on_step(it, metrics)``, ``on_log(it, loss)`` and
-        ``on_checkpoint(step, future)`` methods."""
+        nodes, all on the session runtime.  With ``plan.localities > 1``
+        the prefetch *builds* run on worker localities and stream back;
+        placement and device dispatch stay here, so the loss trajectory
+        is identical to the single-process run.
+
+        Args:
+            stream: object with ``batch_at(step) -> dict``; defaults to
+                the architecture's synthetic stream (``stream_for``).
+                Must be picklable when localities > 1.
+            steps: total step count (absolute, not incremental).
+            hooks: any object with optional ``on_step(it, metrics)``,
+                ``on_log(it, loss)`` and ``on_checkpoint(step, future)``
+                methods.
+            ckpt_dir: checkpoint directory; empty disables snapshots.
+            ckpt_every / log_every: cadence in steps.
+            resume: restore the latest checkpoint in ``ckpt_dir`` first.
+            fail_at_step: drill seam - raise an injected node failure at
+                this step (ignored under ``resume``).
+            kill_locality_at_step: drill seam - SIGKILL a worker
+                locality at this step; training must survive via task
+                re-spawn (no-op when localities == 1).
+            resilience: "none" | "replay" | "replicate" (HPX-style step
+                resilience, ``core.resilience``).
+            verbose: print progress and the final runtime report.
+        Returns:
+            dict with ``final_loss``, per-log ``losses``, ``params``,
+            ``step``, and ``runtime_stats`` (the documented
+            ``RuntimeStats.to_json`` schema, plus ``distributed`` when
+            localities > 1).
+        Raises:
+            RuntimeError: the injected failure of ``fail_at_step``.
+        """
         plan, runtime, step = self.plan, self.runtime, self.train_step
         if stream is None:
             stream = stream_for(self.cfg, batch=plan.batch, seq=plan.seq,
@@ -189,7 +285,8 @@ class Session:
                 if verbose:
                     print(f"[train] resumed from step {start}")
 
-        prefetch = Prefetcher(stream, step.batch_shardings, graph=runtime)
+        prefetch = Prefetcher(stream, step.batch_shardings, graph=runtime,
+                              dgraph=self.distributed)
         runner = (ResilientRunner(step.fn_nodonate)
                   if resilience in ("replay", "replicate") else None)
         inflight = Pipeline(depth=2)
@@ -214,6 +311,12 @@ class Session:
         metrics = None
         try:
             for it in range(start, steps):
+                if kill_locality_at_step is not None \
+                        and it == kill_locality_at_step:
+                    killed = self.kill_locality()
+                    if verbose and killed is not None:
+                        print(f"[train] drill: killed locality {killed} "
+                              f"at step {it}", flush=True)
                 batch = prefetch.get(it)
                 if fail_at_step is not None and it == fail_at_step \
                         and not resume:
@@ -261,23 +364,38 @@ class Session:
 
         losses = [f.result() for f in log_futs]
         st = runtime.stats()
+        stats_json = st.to_json()
+        dstats = (self.distributed.stats()
+                  if self.distributed is not None else None)
+        if dstats is not None:
+            stats_json["distributed"] = dstats
         if metrics is None:    # resumed at/after steps: nothing left to run
             if verbose:
                 print(f"[train] nothing to do: resumed at step {start} "
                       f">= steps {steps}")
             return {"final_loss": float("nan"), "losses": losses,
                     "params": params, "step": start,
-                    "runtime_stats": st.to_json()}
+                    "runtime_stats": stats_json}
         final = float(metrics["loss"])
         if verbose:
             print(f"[train] done: final loss {final:.4f} "
                   f"(host tasks {st.completed}, "
                   f"max in-flight {st.max_in_flight})")
+            hist = stats_json["lane_time_hist"]
+            print(f"[train] task wall-time buckets "
+                  f"{' '.join(hist['labels'])} "
+                  f"(edges_s={hist['edges_s']})")
             for line in st.hist_lines():
                 print(f"[train] task wall-time {line}")
+            if dstats is not None:
+                print(f"[train] localities: dispatched "
+                      f"{dstats['dispatched']} respawned "
+                      f"{dstats['respawned']} wire "
+                      f"{dstats['bytes_sent']}B out / "
+                      f"{dstats['bytes_recv']}B in")
         return {"final_loss": final, "losses": losses,
                 "params": params, "step": steps,
-                "runtime_stats": st.to_json()}
+                "runtime_stats": stats_json}
 
     # -- serve --------------------------------------------------------------
     def serve(self, requests: int = 8, *, prompt_len: int = 32,
@@ -286,9 +404,23 @@ class Session:
         """Batched prefill + decode with slot refill, as a futurized tree:
         each wave is a ``prefill`` node plus ``gen_len`` chained ``decode``
         nodes (dependency edges carry the (token, cache) pair), while the
-        next wave's host prep runs as a PREFETCH node.  Returns throughput
-        plus the traced node names - decode steps are explicit, named
-        graph nodes, not just wave prep."""
+        next wave's host prep runs as a PREFETCH node - on a worker
+        locality when ``plan.localities > 1``, with placement and device
+        work staying on the driver.
+
+        Args:
+            requests: request count when ``prompts`` is None (otherwise
+                ``len(prompts)`` wins).
+            prompt_len: tokens per prompt (synthetic prompts only).
+            gen_len: decode steps per request.
+            slots: decode slots per wave (idle slots are padded).
+            prompts: optional list of int32 token arrays.
+            verbose: print the throughput summary line.
+        Returns:
+            dict with ``tokens_per_s``, ``requests``, ``tokens``, the
+            traced node ``nodes``/``trace`` (decode steps are explicit,
+            named graph nodes), and ``runtime_stats``.
+        """
         plan, runtime, cfg = self.plan, self.runtime, self.cfg
         pre, dec = self._serve_steps_for(prompt_len, gen_len, slots)
         params = init_params(pre.specs, jax.random.PRNGKey(plan.seed))
@@ -307,7 +439,9 @@ class Session:
                     "runtime_stats": self.runtime.stats().to_json()}
         tok_sh = dec.batch_shardings["tokens"]
 
-        def prepare_wave(wave: list) -> dict:
+        def prepare_wave(wave) -> dict:
+            # wave: list of prompt arrays, or the already-stacked ndarray
+            # a worker locality streamed back (np.stack handles both)
             toks = jax.device_put(jnp.asarray(np.stack(wave)),
                                   pre.batch_shardings["tokens"])
             batch = {"tokens": toks}
@@ -315,6 +449,19 @@ class Session:
                 batch["frames"] = jnp.zeros(
                     (slots, cfg.enc_frames, cfg.d_model), cfg.c_dtype)
             return batch
+
+        def defer_wave(wave, w: int):
+            # multi-locality: the host prep (stacking the prompt arrays)
+            # runs on a worker and streams back; placement stays local
+            # under the same "wave:{w}" node name either way
+            if self.distributed is not None:
+                stacked = self.distributed.defer(
+                    _stack_wave, wave, lane=Lane.PREFETCH,
+                    name=f"stack:{w}")
+                return runtime.defer(prepare_wave, stacked,
+                                     lane=Lane.PREFETCH, name=f"wave:{w}")
+            return runtime.defer(prepare_wave, wave, lane=Lane.PREFETCH,
+                                 name=f"wave:{w}")
 
         def take_wave() -> tuple[list, int]:
             wave = [waiting.pop() for _ in range(min(slots, len(waiting)))]
@@ -344,16 +491,13 @@ class Session:
         t0 = time.time()
         try:
             wave, n_real = take_wave()
-            batch_fut = runtime.defer(prepare_wave, wave, lane=Lane.PREFETCH,
-                                      name="wave:0")
+            batch_fut = defer_wave(wave, 0)
             tail = None
             while True:
                 nxt = None
                 if waiting and done + n_real < requests:
                     next_wave, next_real = take_wave()
-                    nxt = (runtime.defer(prepare_wave, next_wave,
-                                         lane=Lane.PREFETCH,
-                                         name=f"wave:{w + 1}"), next_real)
+                    nxt = (defer_wave(next_wave, w + 1), next_real)
                 # The wave's futurized tree, built up-front: nothing below
                 # forces a transfer, so prefill and every decode step stay
                 # in flight back-to-back under JAX async dispatch.
@@ -377,6 +521,9 @@ class Session:
         dt = time.time() - t0
         tps = tokens_out / dt
         st = runtime.stats()
+        stats_json = st.to_json()
+        if self.distributed is not None:
+            stats_json["distributed"] = self.distributed.stats()
         nodes = tracer.names()
         n_decode = sum(n.startswith("decode:") for n in nodes)
         if verbose:
@@ -385,13 +532,24 @@ class Session:
                   f"decode nodes {n_decode}, host tasks {st.completed})")
         return {"tokens_per_s": tps, "requests": requests,
                 "tokens": tokens_out, "nodes": nodes,
-                "trace": tracer.signature(), "runtime_stats": st.to_json()}
+                "trace": tracer.signature(), "runtime_stats": stats_json}
 
     # -- dryrun -------------------------------------------------------------
     def dryrun(self, shape: Optional[str] = None) -> dict:
         """Lower + compile this plan's cell and return its analysis record
         (memory, loop-aware HLO costs, collectives, roofline terms) - the
-        per-cell body of ``launch/dryrun.py``."""
+        per-cell body of ``launch/dryrun.py``.
+
+        Args:
+            shape: named ``configs.SHAPES`` cell; defaults to
+                ``plan.shape``.
+        Returns:
+            dict with ``status`` ("ok" | "skipped" | "error") plus, when
+            ok, device counts, lower/compile times, per-device flops and
+            bytes, memory analysis, collectives, and roofline terms.
+        Raises:
+            ValueError: neither ``shape`` nor ``plan.shape`` is set.
+        """
         shape_name = shape or self.plan.shape
         if shape_name is None:
             raise ValueError("dryrun needs a named shape (Plan.shape or "

@@ -1,12 +1,22 @@
-"""Mesh construction.  A FUNCTION, not a module-level constant: importing
-this module never touches jax device state.
+"""Mesh construction and multi-process device bring-up.  Everything here
+is a FUNCTION, not a module-level constant: importing this module never
+touches jax device state.
 
 Version note: ``jax.sharding.AxisType`` (and the ``axis_types=`` kwarg of
 ``jax.make_mesh``) only exist in newer jax releases.  All axes here are
 Auto-typed, which is also the default, so on older jax we simply build the
 mesh without the kwarg - same semantics either way.
+
+Multi-process note: when the multi-locality runtime (``repro.distrib``)
+spawns worker processes, each worker calls ``maybe_init_jax_distributed``
+before any device work.  It is a no-op unless ``PHYRAX_JAX_COORDINATOR``
+is set, because the CPU-only CI path runs each locality on its *own*
+local jax (host tasks only, no cross-process device collectives) and
+must not stand up a coordination service it never uses.
 """
 from __future__ import annotations
+
+import os
 
 import jax
 
@@ -51,3 +61,44 @@ def mesh_devices(mesh) -> int:
     for v in mesh.shape.values():
         n *= v
     return n
+
+
+def maybe_init_jax_distributed(*, process_id: int | None = None,
+                               num_processes: int | None = None) -> bool:
+    """Initialize ``jax.distributed`` for a spawned multi-process run.
+
+    Reads ``PHYRAX_JAX_COORDINATOR`` (``host:port`` of process 0) plus
+    optional ``PHYRAX_JAX_NUM_PROCESSES`` / ``PHYRAX_JAX_PROCESS_ID``
+    overrides; explicit arguments win over the environment.  Returns
+    False without touching jax unless a coordinator is configured - the
+    CPU / single-process path must stay cold.
+
+    Args:
+        process_id: this process's rank (defaults to the env override).
+        num_processes: world size (defaults to the env override).
+    Returns:
+        True if ``jax.distributed.initialize`` was called.
+    Raises:
+        ValueError: a coordinator is configured but the world size is
+            not (set ``PHYRAX_JAX_NUM_PROCESSES`` or pass
+            ``num_processes``) - half-configured must be loud, not a
+            guaranteed-wrong ``initialize(num_processes=0)``.
+        RuntimeError: initialization was configured but failed (surfaced
+            from jax; a misconfigured coordinator should be loud).
+    """
+    coordinator = os.environ.get("PHYRAX_JAX_COORDINATOR")
+    if not coordinator:
+        return False
+    if num_processes is None:
+        num_processes = int(os.environ.get("PHYRAX_JAX_NUM_PROCESSES", "0"))
+    if not num_processes:
+        raise ValueError(
+            "PHYRAX_JAX_COORDINATOR is set but the world size is unknown: "
+            "set PHYRAX_JAX_NUM_PROCESSES (and PHYRAX_JAX_PROCESS_ID) or "
+            "pass num_processes/process_id explicitly")
+    if process_id is None:
+        process_id = int(os.environ.get("PHYRAX_JAX_PROCESS_ID", "0"))
+    jax.distributed.initialize(coordinator_address=coordinator,
+                               num_processes=num_processes,
+                               process_id=process_id)
+    return True

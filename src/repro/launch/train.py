@@ -34,7 +34,9 @@ def run(args) -> dict:
         return session.train(
             steps=args.steps, ckpt_dir=args.ckpt, ckpt_every=args.ckpt_every,
             log_every=args.log_every, resume=args.resume,
-            fail_at_step=args.fail_at_step, resilience=args.resilience)
+            fail_at_step=args.fail_at_step,
+            kill_locality_at_step=args.kill_locality_at_step,
+            resilience=args.resilience)
 
 
 def parser() -> argparse.ArgumentParser:
@@ -50,6 +52,9 @@ def parser() -> argparse.ArgumentParser:
     ap.add_argument("--log-every", type=int, default=5)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--fail-at-step", type=int, default=None)
+    ap.add_argument("--kill-locality-at-step", type=int, default=None,
+                    help="drill: SIGKILL a worker locality at this step "
+                         "(needs --localities > 1); training must survive")
     ap.add_argument("--resilience", default="none",
                     choices=["none", "replay", "replicate"])
     return ap

@@ -1,0 +1,285 @@
+"""Multi-locality runtime: active messages, AGAS, cross-process spawn,
+error/cancellation across the wire, locality loss, and Session parity.
+
+Most tests drive 2-3 REAL processes (``multiprocessing.spawn``) through a
+module-scoped ``DistributedGraph``; everything a worker runs must be a
+module-level function here, because it crosses the wire by reference.
+"""
+import time
+from concurrent.futures import CancelledError
+
+import numpy as np
+import pytest
+
+from repro.core.futures import FuturizedGraph, Lane
+from repro.data.pipeline import Prefetcher
+from repro.distrib import (DistributedGraph, ObjectDirectory, RemoteRef)
+from repro.distrib.messaging import Endpoint
+from repro.frontend import Plan
+
+ARCH = "qwen2.5-3b"
+
+
+# -- module-level task functions (ship by reference) -------------------------
+
+def build(i):
+    return {"x": np.full((4,), i)}
+
+
+def double(b):
+    return {k: v * 2 for k, v in b.items()}
+
+
+def boom(i):
+    raise ValueError(f"poisoned batch {i}")
+
+
+def slow_mul(i, delay=0.4):
+    time.sleep(delay)
+    return i * 10
+
+
+class FlakyStream:
+    """Picklable stream whose ``batch_at`` raises for one step."""
+
+    def __init__(self, poison_step):
+        self.poison_step = poison_step
+
+    def batch_at(self, step):
+        if step == self.poison_step:
+            raise ValueError(f"poisoned batch {step}")
+        return {"tokens": np.full((2, 4), step, np.int32)}
+
+
+# -- fixtures ----------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def cluster():
+    """One driver + two worker localities, reused across tests."""
+    dg = DistributedGraph(localities=3, name="test-cluster")
+    yield dg
+    dg.shutdown()
+
+
+# -- messaging (in-process endpoints) ----------------------------------------
+
+def test_request_ack_post_and_handler_errors():
+    a, b = Endpoint(0), Endpoint(1)
+    seen = []
+    b.register("echo", lambda src, p: {"from": src, "got": p})
+    b.register("note", lambda src, p: seen.append(p))
+    b.register("fail", lambda src, p: 1 / 0)
+    try:
+        a.connect(1, b.address)
+        out = a.request(1, "echo", {"arr": np.arange(5)})
+        assert out["from"] == 0 and (out["got"]["arr"] == np.arange(5)).all()
+        a.post(1, "note", "fire-and-forget")
+        deadline = time.time() + 5
+        while not seen and time.time() < deadline:
+            time.sleep(0.01)
+        assert seen == ["fire-and-forget"]
+        with pytest.raises(ZeroDivisionError):   # remote exc re-raises here
+            a.request(1, "fail")
+        assert a.bytes_sent > 0 and b.bytes_recv > 0
+    finally:
+        a.close()
+        b.close()
+
+
+def test_agas_directory_local_put_fetch_free():
+    d = ObjectDirectory(rank=0)
+    ref = d.put({"w": np.ones((3,))}, summary="weights")
+    assert isinstance(ref, RemoteRef) and ref.owner == 0 and ref.nbytes == 24
+    assert (d.fetch(ref)["w"] == 1).all()
+    d.free(ref)
+    with pytest.raises(KeyError):
+        d.fetch(ref)
+
+
+# -- promise nodes (the cross-wire resolution primitive) ---------------------
+
+def test_promise_resolves_dependents_and_rejects_double_set():
+    g = FuturizedGraph(max_workers=2, name="promise")
+    try:
+        p = g.promise(name="remote-result")
+        dep = g.defer(lambda x: x + 1, p)
+        assert not p.done()
+        assert p.set_result(41) is True
+        assert dep.result() == 42
+        assert p.set_result(0) is False         # late result: discarded
+        q = g.promise(name="remote-error")
+        dq = g.defer(lambda x: x, q)
+        assert q.set_exception(ValueError("wire")) is True
+        with pytest.raises(ValueError, match="wire"):
+            dq.result()
+        with pytest.raises(RuntimeError, match="not a promise"):
+            dep.set_result(1)                   # scheduler-owned node
+    finally:
+        g.shutdown(wait=True)
+
+
+# -- distributed graph over real processes -----------------------------------
+
+def test_remote_spawn_chain_and_data_affinity(cluster):
+    a = cluster.defer(build, 3, lane=Lane.PREFETCH, name="build")
+    b = cluster.defer(double, a, name="double")
+    assert (b.result()["x"] == 6).all()
+    # the dependent followed its input's locality (data affinity)
+    assert a.home in (1, 2) and b.home == a.home
+
+
+def test_pin_keeps_result_remote_and_cross_locality_fetch(cluster):
+    pinned = cluster.defer(build, 7, locality=1, pin=True, name="pinned")
+    ref = pinned.result()
+    assert isinstance(ref, RemoteRef) and ref.owner == 1
+    assert (cluster.fetch(ref)["x"] == 7).all()          # driver <- worker1
+    far = cluster.defer(double, ref, locality=2, name="far")
+    assert (far.result()["x"] == 14).all()               # worker2 <- worker1
+
+
+def test_remote_error_poisons_only_dependents_and_locality_survives(cluster):
+    bad = cluster.defer(boom, 9, locality=1, name="bad")
+    dep = cluster._graph.defer(lambda x: x, bad, name="dep")
+    sibling = cluster.defer(build, 1, locality=1, name="sibling")
+    with pytest.raises(ValueError, match="poisoned batch 9"):
+        dep.result(timeout=30)
+    assert (sibling.result(timeout=30)["x"] == 1).all()
+    after = cluster.defer(build, 2, locality=1, name="after")
+    assert (after.result(timeout=30)["x"] == 2).all()    # locality alive
+
+
+def test_upstream_poison_settles_undispatched_remote_task(cluster):
+    """A distributed task whose dependency fails BEFORE dispatch must
+    still settle (with the original error) - a stranded promise would
+    hang barrier/shutdown forever."""
+    bad = cluster.defer(boom, 4, locality=1, name="upstream")
+    downstream = cluster.defer(double, bad, name="downstream")
+    with pytest.raises(ValueError, match="poisoned batch 4"):
+        downstream.result(timeout=30)
+    cluster.barrier(timeout=30)          # nothing left outstanding
+    assert cluster.stats()["outstanding"] == 0
+
+
+def test_cancel_before_dispatch_releases_record(cluster):
+    gate = cluster.defer(slow_mul, 1, locality=1, name="gate")
+    dep = cluster.defer(double, gate, name="dep-gated")
+    cluster.cancel(dep)                  # before its dispatch node ran
+    with pytest.raises(CancelledError):
+        dep.result(timeout=30)
+    assert gate.result(timeout=30) == 10
+    cluster.barrier(timeout=30)
+    assert cluster.stats()["outstanding"] == 0
+
+
+def test_cancellation_across_the_wire(cluster):
+    # worker graphs have 2 threads: occupy both, then cancel the queued one
+    s1 = cluster.defer(slow_mul, 1, locality=1, name="slow1")
+    s2 = cluster.defer(slow_mul, 2, locality=1, name="slow2")
+    s3 = cluster.defer(slow_mul, 3, locality=1, name="slow3")
+    time.sleep(0.1)
+    cluster.cancel(s3)
+    with pytest.raises(CancelledError):
+        s3.result(timeout=30)
+    assert s1.result(timeout=30) == 10 and s2.result(timeout=30) == 20
+
+
+def test_prefetcher_remote_poison_kills_only_that_batch(cluster):
+    pf = Prefetcher(FlakyStream(poison_step=1), shardings=None, depth=2,
+                    graph=cluster._graph, dgraph=cluster)
+    try:
+        assert (pf.get(0)["tokens"] == 0).all()
+        with pytest.raises(ValueError, match="poisoned batch 1"):
+            pf.get(1)
+        assert (pf.get(2)["tokens"] == 2).all()          # stream continues
+    finally:
+        pf.close()
+
+
+def test_pin_honored_on_driver_placement(cluster):
+    """pin=True must yield a RemoteRef regardless of where placement
+    lands - including the driver-local fast path."""
+    fut = cluster.defer(build, 8, locality=0, pin=True, name="pin-local")
+    ref = fut.result(timeout=30)
+    assert isinstance(ref, RemoteRef) and ref.owner == 0
+    assert (cluster.fetch(ref)["x"] == 8).all()
+
+
+def test_foreign_graph_dependency_raises_and_leaves_nothing_behind(cluster):
+    other = FuturizedGraph(max_workers=1, name="other")
+    try:
+        foreign = other.defer(lambda: 1)
+        with pytest.raises(ValueError, match="different graph"):
+            cluster.defer(double, foreign, locality=1, name="foreign")
+        cluster.barrier(timeout=30)      # no stranded promise/record
+        assert cluster.stats()["outstanding"] == 0
+    finally:
+        other.shutdown(wait=True)
+
+
+def test_replicate_checksum_vote_across_localities(cluster):
+    fut = cluster.replicate(build, 5, n=2, name="rep")
+    assert (fut.result(timeout=30)["x"] == 5).all()
+
+
+def test_unpicklable_function_fails_cleanly(cluster):
+    fut = cluster.defer(lambda: 1, locality=1, name="closure")
+    with pytest.raises(RuntimeError, match="not picklable"):
+        fut.result(timeout=30)
+
+
+def test_remote_stats_visible_from_driver(cluster):
+    cluster.defer(build, 1, locality=1, name="warm").result(timeout=30)
+    st = cluster.remote_stats(1)
+    assert st["completed"] >= 1
+    assert st["lane_time_hist"]["labels"][0] == "<100us"
+
+
+def test_worker_loss_respawns_in_flight_tasks():
+    dg = DistributedGraph(localities=3, name="kill-drill")
+    try:
+        futs = [dg.defer(slow_mul, i, locality=2, name=f"r{i}")
+                for i in range(3)]
+        time.sleep(0.1)                  # let the first task start
+        dg.group.kill(2)
+        assert [f.result(timeout=60) for f in futs] == [0, 10, 20]
+        st = dg.stats()
+        assert st["respawned"] >= 1 and st["alive_workers"] == [1]
+    finally:
+        dg.shutdown()
+
+
+# -- Session parity -----------------------------------------------------------
+
+def _plan(**kw):
+    kw.setdefault("arch", ARCH)
+    kw.setdefault("batch", 4)
+    kw.setdefault("seq", 16)
+    return Plan(**kw)
+
+
+def test_session_serve_parity_single_vs_multi_locality():
+    kw = dict(requests=4, slots=2, prompt_len=16, gen_len=4, verbose=False)
+    with _plan().compile() as single:
+        ref = single.serve(**kw)
+    with _plan(localities=2).compile() as multi:
+        out = multi.serve(**kw)
+        dstats = out["runtime_stats"]["distributed"]
+    assert out["tokens"] == ref["tokens"] and out["requests"] == 4
+    decode = [n for n in out["nodes"] if n.startswith("decode:")]
+    assert decode == [n for n in ref["nodes"] if n.startswith("decode:")]
+    assert dstats["dispatched"].get(1, 0) > 0    # waves really went remote
+
+
+def test_session_train_two_localities_matches_single_even_killed():
+    """The acceptance drill: a 2-locality run (with a worker SIGKILLed
+    mid-run!) produces the same loss as the single-process run - remote
+    prefetch changes where batches are built, never what they contain."""
+    with _plan().compile() as single:
+        ref = single.train(steps=6, log_every=3, verbose=False)
+    with _plan(localities=2).compile() as multi:
+        out = multi.train(steps=6, log_every=3, kill_locality_at_step=3,
+                          verbose=False)
+        dstats = out["runtime_stats"]["distributed"]
+    assert abs(out["final_loss"] - ref["final_loss"]) < 1e-4
+    assert dstats["dispatched"].get(1, 0) > 0
+    assert dstats["alive_workers"] == []         # the drill really killed it
