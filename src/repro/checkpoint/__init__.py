@@ -1,0 +1,15 @@
+"""Locality-owned sharded checkpoints (DESIGN.md §10).
+
+``format`` is the byte-level contract - shard files, the driver-written
+manifest (tree structure, shard->locality ownership map, per-shard
+checksums), atomic rename commit; ``checkpoint`` is the futurized I/O
+layer that schedules save/load shard tasks on their owning localities
+and reshards on restore (N writers -> M readers, M=1 included)."""
+from .checkpoint import CheckpointManager  # noqa: F401
+from .format import (CheckpointCorruptError, assign_shards,  # noqa: F401
+                     build_manifest, commit_manifest, load_manifest,
+                     read_shard, save_shard)
+
+__all__ = ["CheckpointCorruptError", "CheckpointManager", "assign_shards",
+           "build_manifest", "commit_manifest", "load_manifest",
+           "read_shard", "save_shard"]

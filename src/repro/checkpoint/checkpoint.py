@@ -1,30 +1,38 @@
-"""Checkpointing: sharded, checksummed, asynchronous, mesh-elastic.
+"""Distributed checkpoint I/O: locality-owned shards as futurized tasks.
 
-Layout (one directory per step):
-    <dir>/step_000120/
-        manifest.json      tree structure, shapes/dtypes, blake2b checksums
-        arr_00000.npy ...  one file per leaf
+The byte-level format lives in ``format.py`` (DESIGN.md §10); this
+module is the scheduling half.  ``CheckpointManager`` turns each save
+into per-shard ``save_shard`` tasks placed on the locality that OWNS
+the shard (``DistributedGraph.defer``; the driver is rank 0 and owns a
+shard too), chained on the CHECKPOINT lane behind step retirement and
+the previous save, so saves overlap training.  The manifest is built by
+the driver only after every shard entry resolved and committed
+atomically by rename - the driver no longer serializes or writes the
+whole snapshot.
 
 Properties the launcher relies on:
-  * checksums: every leaf is hashed at save and verified at restore -
-    silent-corruption of a checkpoint is detected, not loaded (paper R9);
-  * async save: the device->host transfer happens on the caller, the file
-    I/O in a background thread (core.futures), so training continues while
-    bytes hit disk;
-  * elastic restore: leaves are ``device_put`` against the *current* mesh's
-    shardings - a checkpoint written on one mesh restores onto any other
-    (different device count / topology), which is the restart path for both
-    node failure and elastic rescaling;
-  * atomicity: writes go to ``<dir>/.tmp_step_X`` and are renamed only when
-    complete, so a crash mid-save never corrupts the latest checkpoint.
+  * distributed save: each locality checksums, serializes, and writes
+    the shards it owns; with one locality everything runs locally
+    through the same format layer;
+  * async save: the device->host transfer happens on the caller, every
+    shard write is a ``Lane.CHECKPOINT`` graph node, so training
+    continues while bytes hit disk;
+  * failure model: a killed locality's shard tasks are idempotent and
+    re-spawn on a survivor (or the driver), with the actual writer
+    recorded in the manifest; if a save cannot complete, the manifest
+    is never committed - the previous checkpoint stays latest, no torn
+    state (paper R9);
+  * resharded restore: shards are read by the CURRENT localities, which
+    need not be the writers - a checkpoint written by N localities
+    restores into M (M=1 included), with checksum verification
+    (``CheckpointCorruptError`` names the bad shard);
+  * elastic restore: leaves are ``device_put`` against the *current*
+    mesh's shardings - a snapshot written on one mesh restores onto any
+    other topology.
 """
 from __future__ import annotations
 
-import hashlib
-import json
-import os
 import shutil
-import time
 from pathlib import Path
 from typing import Any, Optional
 
@@ -32,48 +40,126 @@ import jax
 import numpy as np
 
 from ..core.futures import FuturizedGraph, Lane, PhyFuture
+from . import format as fmt
+from .format import CheckpointCorruptError
+
+__all__ = ["CheckpointCorruptError", "CheckpointManager"]
 
 
-def _checksum(a: np.ndarray) -> str:
-    h = hashlib.blake2b(digest_size=16)
-    h.update(str(a.dtype).encode())
-    h.update(str(a.shape).encode())
-    h.update(np.ascontiguousarray(a).tobytes())
-    return h.hexdigest()
+def _prepare_tmp(tmp: str, *_deps):
+    """Dependency gate + clean slate.  Collapses the (step retirement,
+    previous save) edges into one local node, so shard tasks ship no
+    device values - and wipes a stale temp dir left by an aborted
+    earlier attempt of the same step, so its files can never leak into
+    this save's commit.  Runs strictly after the previous save's commit
+    (saves chain), strictly before this save's shard writes (they
+    depend on it)."""
+    p = Path(tmp)
+    if p.exists():
+        shutil.rmtree(p)
+    p.mkdir(parents=True)
+    return None
 
 
 class CheckpointManager:
-    """When ``graph`` is supplied (the Session-owned path: ``Session.train``
+    """Schedules checkpoint saves/restores over the futurized runtime.
+
+    When ``graph`` is supplied (the Session-owned path: ``Session.train``
     passes its runtime), save nodes ride that graph and ``close()`` only
     drains pending writes - the graph's lifetime belongs to its owner.
     Standalone use spins up a private graph, shut down on ``close()``.
-    Usable as a context manager either way."""
+    Usable as a context manager either way.
+
+    Args:
+        directory: checkpoint root; one ``step_XXXXXXXX`` dir per save.
+            Shared by every locality (same filesystem / shared mount).
+        keep: committed checkpoints retained (older ones are GC'd).
+        async_save: schedule writes as graph nodes (False runs saves
+            inline on the caller, single-locality, for tests).
+        graph: the ``FuturizedGraph`` save/commit nodes ride; private
+            one created (and owned) when None.
+        dgraph: a ``repro.distrib.DistributedGraph``; when given, shard
+            tasks are placed on their owning localities and restores
+            spread shard reads over the current localities.  Its local
+            graph must be ``graph`` (futures cannot span graphs).
+    Raises:
+        ValueError: ``graph`` and ``dgraph.graph`` differ.
+    """
 
     def __init__(self, directory: str | Path, *, keep: int = 3,
                  async_save: bool = True,
-                 graph: Optional[FuturizedGraph] = None):
+                 graph: Optional[FuturizedGraph] = None,
+                 dgraph: Optional[Any] = None):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
         self.async_save = async_save
-        self._own_graph = graph is None
-        self._graph = graph if graph is not None else FuturizedGraph(
-            max_workers=2, name="checkpoint")
+        self._dgraph = dgraph
+        if dgraph is not None:
+            if graph is not None and graph is not dgraph.graph:
+                raise ValueError(
+                    "graph and dgraph.graph must be the same "
+                    "FuturizedGraph - distributed shard futures cannot "
+                    "span graphs")
+            self._own_graph = False
+            self._graph = dgraph.graph
+        else:
+            self._own_graph = graph is None
+            self._graph = graph if graph is not None else FuturizedGraph(
+                max_workers=2, name="checkpoint")
         self._pending: Optional[PhyFuture] = None
+
+    # -- placement ------------------------------------------------------------
+    def ranks(self) -> list[int]:
+        """Locality ranks owning a shard of the next save: the driver
+        plus every alive worker (``[0]`` without a distributed graph)."""
+        if self._dgraph is None:
+            return [0]
+        return [0] + self._dgraph.group.alive_workers()
+
+    def _defer_on(self, rank: int, fn, *args, name: str, **kwargs):
+        """One CHECKPOINT-lane task on ``rank`` (driver-local without a
+        distributed graph); falls back to the driver if ``rank`` died
+        between ``ranks()`` and this call."""
+        if self._dgraph is None:
+            return self._graph.defer(fn, *args, lane=Lane.CHECKPOINT,
+                                     name=name, **kwargs)
+        try:
+            return self._dgraph.defer(fn, *args, lane=Lane.CHECKPOINT,
+                                      name=name, locality=rank,
+                                      idempotent=True, **kwargs)
+        except ValueError:            # rank died since ranks(): retarget
+            return self._dgraph.defer(fn, *args, lane=Lane.CHECKPOINT,
+                                      name=name, locality=0,
+                                      idempotent=True, **kwargs)
 
     # -- save -----------------------------------------------------------------
     def save(self, step: int, tree: Any, *, meta: Optional[dict] = None,
              deps: tuple = ()):
-        """Snapshot a pytree.  Returns immediately when async: the file I/O
-        becomes a ``Lane.CHECKPOINT`` graph node that runs after ``deps``
-        (e.g. the step-retirement future) and after the previous save (writes
-        chain by dependency edge, never by blocking the caller).  The
-        device->host transfer stays synchronous: leaf buffers may be donated
-        to the next dispatched step, so values must be captured now.
+        """Snapshot a pytree as locality-owned shards.
+
+        Returns immediately when async: the tree is split into one shard
+        per locality (``format.assign_shards``), each written by its
+        owning locality as a ``Lane.CHECKPOINT`` task gated on ``deps``
+        (e.g. the step-retirement future) and on the previous save
+        (writes chain by dependency edge, never by blocking the caller);
+        the driver commits the manifest only after every shard resolved.
+        The device->host transfer stays synchronous: leaf buffers may be
+        donated to the next dispatched step, so values are captured now.
 
         Fail fast: if the previous async save already finished with an
         error, raise it here rather than silently poisoning every later
-        write in the dependency chain until close()."""
+        write in the dependency chain until close().
+
+        Args:
+            step: step number the snapshot belongs to.
+            tree: the pytree to snapshot.
+            meta: free-form metadata stored in the manifest.
+            deps: futures the shard writes must wait for.
+        Returns:
+            The manifest-commit ``PhyFuture`` (resolving to the committed
+            directory) when async; the committed ``Path`` when sync.
+        """
         if self._pending is not None and self._pending.done():
             failed, self._pending = self._pending, None
             exc = failed.exception()
@@ -82,42 +168,46 @@ class CheckpointManager:
         leaves, treedef = jax.tree.flatten(tree)
         host = [np.asarray(x) for x in leaves]
         treedef_str = str(treedef)
+        shards = fmt.assign_shards(len(host), self.ranks())
+        tmp = self.dir / f".tmp_step_{step:08d}"
+        final = self.dir / f"step_{step:08d}"
 
-        def _write(*_deps):
-            tmp = self.dir / f".tmp_step_{step:08d}"
-            final = self.dir / f"step_{step:08d}"
-            if tmp.exists():
-                shutil.rmtree(tmp)
-            tmp.mkdir(parents=True)
-            entries = []
-            for i, a in enumerate(host):
-                name = f"arr_{i:05d}.npy"
-                np.save(tmp / name, a)
-                entries.append({"file": name, "shape": list(a.shape),
-                                "dtype": str(a.dtype),
-                                "checksum": _checksum(a)})
-            manifest = {"step": step, "treedef": treedef_str,
-                        "n_leaves": len(host), "entries": entries,
-                        "meta": meta or {},
-                        "saved_at": time.strftime("%Y-%m-%d %H:%M:%S")}
-            (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
-            if final.exists():
-                shutil.rmtree(final)
-            os.rename(tmp, final)
-            self._gc()
-            return final
+        if not self.async_save:
+            for d in deps:
+                d.result()
+            _prepare_tmp(str(tmp))
+            entries = [fmt.save_shard(str(tmp), sid, idx,
+                                      [host[i] for i in idx])
+                       for sid, _rank, idx in shards]
+            return self._commit(step, treedef_str, len(host), meta,
+                                str(tmp), str(final), *entries)
 
-        if self.async_save:
-            order = deps if self._pending is None else (*deps, self._pending)
-            self._pending = self._graph.defer(
-                _write, *order, lane=Lane.CHECKPOINT, name=f"ckpt:{step}")
-            return self._pending
-        for d in deps:
-            d.result()
-        return _write()
+        order = deps if self._pending is None else (*deps, self._pending)
+        gate = self._graph.defer(_prepare_tmp, str(tmp), *order,
+                                 lane=Lane.CHECKPOINT,
+                                 name=f"ckpt:gate:{step}")
+        entry_futs = [
+            self._defer_on(rank, fmt.save_shard, str(tmp), sid,
+                           list(idx), [host[i] for i in idx], gate,
+                           name=f"ckpt:shard{sid}:{step}")
+            for sid, rank, idx in shards]
+        self._pending = self._graph.defer(
+            self._commit, step, treedef_str, len(host), meta,
+            str(tmp), str(final), *entry_futs,
+            lane=Lane.CHECKPOINT, name=f"ckpt:manifest:{step}")
+        return self._pending
+
+    def _commit(self, step, treedef_str, n_leaves, meta, tmp, final,
+                *entries) -> Path:
+        manifest = fmt.build_manifest(step=step, treedef=treedef_str,
+                                      n_leaves=n_leaves,
+                                      shards=list(entries), meta=meta)
+        out = fmt.commit_manifest(Path(tmp), Path(final), manifest)
+        self._gc()
+        return out
 
     def wait(self):
-        """Barrier: block until every pending save has hit disk."""
+        """Barrier: block until every pending save has committed."""
         if self._pending is not None:
             self._pending.result()
             self._pending = None
@@ -139,6 +229,16 @@ class CheckpointManager:
         steps = sorted(self.all_steps())
         for s in steps[:-self.keep]:
             shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+        latest = steps[-1] if steps else None
+        # temp dirs of aborted or superseded saves are garbage once a
+        # same-or-later step has committed
+        for p in self.dir.glob(".tmp_step_*"):
+            try:
+                s = int(p.name.rsplit("_", 1)[1])
+            except ValueError:
+                continue
+            if latest is not None and s <= latest:
+                shutil.rmtree(p, ignore_errors=True)
 
     # -- restore ----------------------------------------------------------------
     def all_steps(self) -> list[int]:
@@ -156,38 +256,69 @@ class CheckpointManager:
 
     def restore(self, like: Any, *, step: Optional[int] = None,
                 shardings: Any = None, strict_checksums: bool = True):
-        """Load a pytree with the structure of ``like``; device_put against
-        ``shardings`` (same structure) for elastic mesh restore.
-        Returns (step, tree)."""
+        """Load a pytree with the structure of ``like``.
+
+        Shards are read by the CURRENT localities (spread round-robin
+        over the driver + alive workers), which need not be the writers:
+        a checkpoint written by N localities restores into M, including
+        M=1.  Leaves are ``device_put`` against ``shardings`` (same
+        structure) for elastic mesh restore.
+
+        Args:
+            like: pytree giving the structure (and leaf count) expected.
+            step: step to load; latest when None.
+            shardings: optional shardings pytree for ``device_put``.
+            strict_checksums: verify per-leaf + per-shard checksums.
+        Returns:
+            ``(step, tree)``.
+        Raises:
+            FileNotFoundError: no checkpoint under the directory.
+            ValueError: leaf count does not match ``like``.
+            CheckpointCorruptError: a shard is missing, truncated, or
+                fails checksum verification (the message names it).
+        """
         self.wait()
         if step is None:
             step = self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {self.dir}")
         d = self.dir / f"step_{step:08d}"
-        manifest = json.loads((d / "manifest.json").read_text())
+        manifest = fmt.load_manifest(d)
         leaves_like, treedef = jax.tree.flatten(like)
         if manifest["n_leaves"] != len(leaves_like):
             raise ValueError(
                 f"checkpoint has {manifest['n_leaves']} leaves, "
                 f"expected {len(leaves_like)}")
+        by_index: dict[int, np.ndarray] = {}
+        for part in self._read_shards(d, manifest["shards"],
+                                      strict_checksums):
+            by_index.update(part)
+        missing = [i for i in range(len(leaves_like)) if i not in by_index]
+        if missing:
+            raise CheckpointCorruptError(
+                f"{d}: leaves {missing} missing from every shard")
         sh_leaves = (jax.tree.leaves(shardings) if shardings is not None
                      else [None] * len(leaves_like))
-        out = []
-        for i, (entry, sh) in enumerate(zip(manifest["entries"], sh_leaves)):
-            a = np.load(d / entry["file"])
-            if strict_checksums and _checksum(a) != entry["checksum"]:
-                raise IOError(
-                    f"checksum mismatch in {d / entry['file']} - refusing "
-                    f"to load a corrupt checkpoint (leaf {i})")
-            out.append(jax.device_put(a, sh) if sh is not None
-                       else jax.numpy.asarray(a))
+        out = [jax.device_put(by_index[i], sh) if sh is not None
+               else jax.numpy.asarray(by_index[i])
+               for i, sh in enumerate(sh_leaves)]
         return step, jax.tree.unflatten(treedef, out)
+
+    def _read_shards(self, d: Path, entries: list, verify: bool) -> list:
+        ranks = self.ranks()
+        if self._dgraph is None or len(ranks) == 1:
+            return [fmt.read_shard(str(d), e, verify=verify)
+                    for e in entries]
+        futs = [self._defer_on(ranks[i % len(ranks)], fmt.read_shard,
+                               str(d), e, verify=verify,
+                               name=f"ckpt:load:{e['file']}")
+                for i, e in enumerate(entries)]
+        return [f.result() for f in futs]
 
     @property
     def meta(self) -> dict:
         step = self.latest_step()
         if step is None:
             return {}
-        d = self.dir / f"step_{step:08d}"
-        return json.loads((d / "manifest.json").read_text()).get("meta", {})
+        return fmt.load_manifest(self.dir / f"step_{step:08d}").get(
+            "meta", {})

@@ -204,9 +204,21 @@ def worker_main(rank: int, world: int, driver_addr, env: Optional[dict] = None):
     configuration (e.g. ``PHYRAX_JAX_COORDINATOR``) lands in the child;
     ``launch.mesh.maybe_init_jax_distributed`` is then given a chance to
     initialize ``jax.distributed`` (a no-op unless configured).
+
+    ``PHYRAX_LOCALITY_RANK`` is always exported, so locality-owned work
+    records its executing rank (checkpoint shard entries name their
+    actual writer - DESIGN.md §10); when the session forwards a
+    checkpoint directory as ``PHYRAX_CKPT_DIR``, it is created here at
+    spawn, so a misconfigured or unwritable checkpoint mount fails the
+    worker immediately (surfacing at ``LocalityGroup`` startup) instead
+    of mid-training at the first shard write.
     """
     for k, v in (env or {}).items():
         os.environ[k] = v
+    os.environ["PHYRAX_LOCALITY_RANK"] = str(rank)
+    ckpt_dir = os.environ.get("PHYRAX_CKPT_DIR")
+    if ckpt_dir:
+        os.makedirs(ckpt_dir, exist_ok=True)
     from ..launch.mesh import maybe_init_jax_distributed
 
     maybe_init_jax_distributed(process_id=rank, num_processes=world)
@@ -364,6 +376,15 @@ class DistributedGraph:
         self.dispatched = collections.Counter()        # per-locality sends
         self.respawned = 0
         self._closed = False
+
+    @property
+    def graph(self) -> FuturizedGraph:
+        """The local ``FuturizedGraph`` distributed promises live on
+        (the session runtime when this object was built by a
+        ``Session``).  Anything that chains futures onto distributed
+        results - e.g. ``CheckpointManager``'s manifest commit - must
+        defer onto this graph."""
+        return self._graph
 
     # -- placement -----------------------------------------------------------
     def _pick(self, lane: Lane, argskw, locality: Optional[int]) -> int:

@@ -48,5 +48,7 @@ def plan_from_args(args, **overrides) -> Plan:
               for name in ("arch", "tiny", "data", "model", "batch", "seq",
                            "seed", "localities")
               if hasattr(args, name)}
+    if hasattr(args, "ckpt"):       # --ckpt -> Plan.ckpt_dir, so worker
+        fields["ckpt_dir"] = args.ckpt   # localities get it at spawn
     fields.update(overrides)
     return Plan(**fields)

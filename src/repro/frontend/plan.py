@@ -72,9 +72,15 @@ class Plan:
         localities: total process count for the multi-locality runtime
             (DESIGN.md §9).  1 runs everything in-process; N > 1 spawns
             N-1 worker localities at ``compile()`` and host-side graph
-            nodes (prefetch builds, serve wave prep) are placed on them
-            by lane + data affinity.  Device dispatch stays on the
-            driver either way.
+            nodes (prefetch builds, serve wave prep, checkpoint shard
+            writes) are placed on them by lane + data affinity.  Device
+            dispatch stays on the driver either way.
+        ckpt_dir: checkpoint directory for ``session.train`` ("" leaves
+            it to the ``ckpt_dir=`` argument).  All localities write
+            their own shards into this one directory (DESIGN.md §10),
+            so it must be shared across them (trivially true on one
+            machine; a shared mount across hosts); worker localities
+            receive it at spawn via ``PHYRAX_CKPT_DIR``.
         overrides: config field overrides applied last.
     """
     arch: str = "qwen3-4b"
@@ -90,6 +96,7 @@ class Plan:
     shape: Optional[str] = None          # named SHAPES cell (dryrun)
     remat: bool = False
     localities: int = 1                  # processes incl. the driver
+    ckpt_dir: str = ""                   # shared checkpoint dir (§10)
     overrides: dict = dataclasses.field(default_factory=dict)
 
     # -- resolution ---------------------------------------------------------
@@ -159,9 +166,14 @@ class Session:
         self.distributed = None
         if plan.localities > 1:
             from ..distrib import DistributedGraph
+            # workers get the checkpoint dir at spawn (PHYRAX_CKPT_DIR):
+            # each locality pre-creates it and writes its own shards
+            # there (DESIGN.md §10)
+            env = {"PHYRAX_CKPT_DIR": plan.ckpt_dir} if plan.ckpt_dir \
+                else None
             self.distributed = DistributedGraph(
                 localities=plan.localities, graph=self.runtime,
-                name=f"session:{plan.arch}")
+                worker_env=env, name=f"session:{plan.arch}")
         self._train_step = None
         self._serve_steps: dict[tuple, tuple] = {}
         self._closed = False
@@ -229,7 +241,8 @@ class Session:
 
     # -- train --------------------------------------------------------------
     def train(self, stream=None, *, steps: int = 50, hooks: Any = None,
-              ckpt_dir: str = "", ckpt_every: int = 20, log_every: int = 5,
+              ckpt_dir: Optional[str] = None, ckpt_every: int = 20,
+              log_every: int = 5,
               resume: bool = False, fail_at_step: Optional[int] = None,
               kill_locality_at_step: Optional[int] = None,
               resilience: str = "none", verbose: bool = True) -> dict:
@@ -248,7 +261,13 @@ class Session:
             hooks: any object with optional ``on_step(it, metrics)``,
                 ``on_log(it, loss)`` and ``on_checkpoint(step, future)``
                 methods.
-            ckpt_dir: checkpoint directory; empty disables snapshots.
+            ckpt_dir: checkpoint directory (defaults to
+                ``plan.ckpt_dir``; empty disables snapshots).  With
+                ``plan.localities > 1`` every save is split into
+                locality-owned shards written by their owners as
+                CHECKPOINT-lane tasks, and resumes read shards across
+                the current localities - including a checkpoint written
+                by a different locality count (DESIGN.md §10).
             ckpt_every / log_every: cadence in steps.
             resume: restore the latest checkpoint in ``ckpt_dir`` first.
             fail_at_step: drill seam - raise an injected node failure at
@@ -268,13 +287,16 @@ class Session:
             RuntimeError: the injected failure of ``fail_at_step``.
         """
         plan, runtime, step = self.plan, self.runtime, self.train_step
+        if ckpt_dir is None:
+            ckpt_dir = plan.ckpt_dir
         if stream is None:
             stream = stream_for(self.cfg, batch=plan.batch, seq=plan.seq,
                                 seed=plan.seed)
         params, opt = step.init(jax.random.PRNGKey(plan.seed))
         start = 0
 
-        ckpt = (CheckpointManager(ckpt_dir, keep=3, graph=runtime)
+        ckpt = (CheckpointManager(ckpt_dir, keep=3, graph=runtime,
+                                  dgraph=self.distributed)
                 if ckpt_dir else None)
         if ckpt is not None and resume:
             latest = ckpt.latest_step()
@@ -349,7 +371,10 @@ class Session:
                     if on_ckpt is not None:
                         on_ckpt(it + 1, fut)
             inflight.drain()
-            if ckpt is not None:
+            # final snapshot - unless the loop's cadence already saved
+            # this exact step (no duplicate serialize/ship/write, and no
+            # rmtree+rename window over a just-committed directory)
+            if ckpt is not None and steps % ckpt_every != 0:
                 ckpt.save(steps, (params, opt), meta={"arch": plan.arch})
         finally:
             # Shutdown barrier - also on the injected-failure path, so a

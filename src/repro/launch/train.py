@@ -9,8 +9,9 @@ Fault tolerance drill (used by examples/elastic_restart.py and tests):
   * --fail-at-step N     raises mid-run AFTER checkpoints exist (simulated
                          node loss);
   * rerunning with --resume picks up the latest checkpoint - including onto
-    a different --data/--model mesh (elastic restart via checkpoint
-    resharding);
+    a different --data/--model mesh AND a different --localities count
+    (elastic restart via checkpoint resharding: with --localities N each
+    locality writes/reads its own shards, DESIGN.md §10);
   * --resilience replay  wraps the step in HPX-style replay (retry on
     non-finite results); replicate votes across replicas by checksum.
 

@@ -1,13 +1,18 @@
-"""Checkpointing: roundtrip, checksums, atomicity, GC, async, restart."""
+"""Checkpointing: roundtrip, checksums, atomicity, GC, async, restart,
+the shard/manifest format layer, and resharded (N writers -> M readers)
+restore simulated without extra processes (the real multi-process drills
+live in tests/test_distrib.py)."""
 import json
-import shutil
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.checkpoint import format as ckfmt
 from repro.checkpoint.checkpoint import CheckpointManager
+from repro.checkpoint.format import CheckpointCorruptError
+from repro.core.futures import FuturizedGraph
 
 
 def _tree(key=0):
@@ -15,6 +20,10 @@ def _tree(key=0):
     return {"w": jax.random.normal(k, (8, 16)),
             "nested": {"b": jnp.arange(5, dtype=jnp.int32),
                        "s": jnp.float32(3.5)}}
+
+
+def _boom():
+    raise RuntimeError("boom: injected dependency failure")
 
 
 def test_roundtrip(tmp_path):
@@ -31,23 +40,23 @@ def test_roundtrip(tmp_path):
 def test_async_save_then_restore(tmp_path):
     cm = CheckpointManager(tmp_path, async_save=True)
     t = _tree(1)
-    fut = cm.save(3, t)
+    cm.save(3, t)
     cm.wait()
     step, back = cm.restore(t)
     assert step == 3
     np.testing.assert_array_equal(np.asarray(back["w"]), np.asarray(t["w"]))
 
 
-def test_checksum_corruption_detected(tmp_path):
+def test_checksum_corruption_detected_and_names_shard(tmp_path):
     cm = CheckpointManager(tmp_path, async_save=False)
     t = _tree(2)
     path = cm.save(1, t)
-    # flip a byte in the first array file
-    f = next(path.glob("arr_*.npy"))
+    # flip a byte in the shard file's leaf data
+    f = next(path.glob("shard_*.bin"))
     raw = bytearray(f.read_bytes())
     raw[-1] ^= 0xFF
     f.write_bytes(bytes(raw))
-    with pytest.raises(IOError, match="checksum"):
+    with pytest.raises(CheckpointCorruptError, match="shard_00000.bin"):
         cm.restore(t)
     # non-strict mode loads anyway
     step, _ = cm.restore(t, strict_checksums=False)
@@ -69,9 +78,133 @@ def test_leaf_count_mismatch_raises(tmp_path):
         cm.restore({"only": jnp.zeros(3)})
 
 
+# -- format layer -------------------------------------------------------------
+
+def test_assign_shards_contiguous_and_balanced():
+    assert ckfmt.assign_shards(5, [0, 1, 2]) == [
+        (0, 0, [0, 1]), (1, 1, [2, 3]), (2, 2, [4])]
+    # fewer leaves than ranks: empty shards are dropped
+    assert ckfmt.assign_shards(2, [0, 1, 2]) == [(0, 0, [0]), (1, 1, [1])]
+    assert ckfmt.assign_shards(3, [0]) == [(0, 0, [0, 1, 2])]
+
+
+def test_manifest_schema_and_ownership_single_process(tmp_path):
+    cm = CheckpointManager(tmp_path, async_save=False)
+    path = cm.save(2, _tree())
+    m = json.loads((path / "manifest.json").read_text())
+    assert m["format"] == ckfmt.FORMAT_VERSION
+    assert m["n_shards"] == 1 and m["ownership"] == {"0": [0]}
+    assert m["n_leaves"] == 3
+    # shards cover exactly the global leaf indices, in order
+    covered = [leaf["index"] for s in m["shards"] for leaf in s["leaves"]]
+    assert covered == [0, 1, 2]
+    for s in m["shards"]:
+        assert s["checksum"] == ckfmt.shard_checksum(
+            leaf["checksum"] for leaf in s["leaves"])
+
+
+def _write_two_shard_checkpoint(tmp_path, t, step=7):
+    """Simulate an N=2 save through the format layer alone."""
+    leaves, treedef = jax.tree.flatten(t)
+    host = [np.asarray(x) for x in leaves]
+    shards = ckfmt.assign_shards(len(host), [0, 1])
+    assert len(shards) == 2
+    tmp = tmp_path / f".tmp_step_{step:08d}"
+    entries = [ckfmt.save_shard(str(tmp), sid, idx, [host[i] for i in idx])
+               for sid, _rank, idx in shards]
+    manifest = ckfmt.build_manifest(step=step, treedef=str(treedef),
+                                    n_leaves=len(host), shards=entries)
+    return ckfmt.commit_manifest(tmp, tmp_path / f"step_{step:08d}",
+                                 manifest)
+
+
+def test_resharded_restore_two_writer_shards_single_reader(tmp_path):
+    """A checkpoint 'written by 2 localities' restores in one process:
+    shard->locality binding is a write-time detail, not a read
+    requirement."""
+    t = _tree(5)
+    _write_two_shard_checkpoint(tmp_path, t)
+    cm = CheckpointManager(tmp_path, async_save=False)
+    step, back = cm.restore(t)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_corrupt_shard_error_names_the_bad_shard(tmp_path):
+    t = _tree(6)
+    path = _write_two_shard_checkpoint(tmp_path, t)
+    f = path / "shard_00001.bin"
+    raw = bytearray(f.read_bytes())
+    raw[-1] ^= 0xFF
+    f.write_bytes(bytes(raw))
+    cm = CheckpointManager(tmp_path, async_save=False)
+    with pytest.raises(CheckpointCorruptError, match="shard_00001.bin"):
+        cm.restore(t)
+    # the untouched shard still reads clean on its own
+    m = ckfmt.load_manifest(path)
+    good = ckfmt.read_shard(str(path), m["shards"][0])
+    assert set(good) == set(range(len(m["shards"][0]["leaves"])))
+
+
+def test_missing_shard_file_is_corruption(tmp_path):
+    t = _tree(7)
+    path = _write_two_shard_checkpoint(tmp_path, t)
+    (path / "shard_00000.bin").unlink()
+    cm = CheckpointManager(tmp_path, async_save=False)
+    with pytest.raises(CheckpointCorruptError, match="shard_00000.bin"):
+        cm.restore(t)
+
+
+def test_aborted_tmp_files_never_leak_into_commit(tmp_path):
+    """An aborted earlier attempt of the same step left files in the
+    temp dir; the next save must start from a clean slate, not commit
+    the orphans."""
+    cm = CheckpointManager(tmp_path, async_save=False)
+    stale = tmp_path / ".tmp_step_00000009"
+    stale.mkdir()
+    (stale / "shard_00042.bin").write_bytes(b"garbage from a dead run")
+    path = cm.save(9, _tree(8))
+    assert sorted(p.name for p in path.iterdir()) == [
+        "manifest.json", "shard_00000.bin"]
+
+
+def test_dead_writer_wip_file_pruned_at_commit(tmp_path):
+    """A writer killed mid-save_shard leaves shard_N.bin.wip-<pid>; the
+    commit (which only runs after the re-spawned write resolved) must
+    prune it, never ship it inside the committed checkpoint."""
+    t = _tree(9)
+    leaves, treedef = jax.tree.flatten(t)
+    host = [np.asarray(x) for x in leaves]
+    tmp = tmp_path / ".tmp_step_00000004"
+    entry = ckfmt.save_shard(str(tmp), 0, range(len(host)), host)
+    (tmp / "shard_00000.bin.wip-99999").write_bytes(b"dead writer")
+    final = ckfmt.commit_manifest(
+        tmp, tmp_path / "step_00000004",
+        ckfmt.build_manifest(step=4, treedef=str(treedef),
+                             n_leaves=len(host), shards=[entry]))
+    assert sorted(p.name for p in final.iterdir()) == [
+        "manifest.json", "shard_00000.bin"]
+
+
+def test_failed_save_commits_nothing(tmp_path):
+    """Atomic failure: a save whose dependency poisons never commits a
+    manifest - the step directory must not exist, latest stays None."""
+    g = FuturizedGraph(max_workers=2, name="ckpt-atomic")
+    try:
+        cm = CheckpointManager(tmp_path, graph=g)
+        poison = g.defer(_boom, name="retire")
+        fut = cm.save(5, _tree(), deps=(poison,))
+        with pytest.raises(RuntimeError, match="boom"):
+            fut.result(timeout=30)
+        assert not (tmp_path / "step_00000005").exists()
+        assert cm.latest_step() is None
+    finally:
+        g.shutdown(wait=True)
+
+
 def test_restart_resumes_training(tmp_path):
     """Full drill: train, 'crash', resume; trajectories must continue."""
-    import argparse
     from repro.launch import train as train_mod
 
     args = train_mod.parser().parse_args([

@@ -1,16 +1,22 @@
 """Multi-locality runtime: active messages, AGAS, cross-process spawn,
-error/cancellation across the wire, locality loss, and Session parity.
+error/cancellation across the wire, locality loss, Session parity, and
+locality-owned checkpoint shards (save on owners, killed-owner save,
+N->M resharded restore).
 
 Most tests drive 2-3 REAL processes (``multiprocessing.spawn``) through a
 module-scoped ``DistributedGraph``; everything a worker runs must be a
 module-level function here, because it crosses the wire by reference.
 """
+import shutil
 import time
 from concurrent.futures import CancelledError
+from pathlib import Path
 
 import numpy as np
 import pytest
 
+from repro.checkpoint import CheckpointManager
+from repro.checkpoint.format import CheckpointCorruptError, load_manifest
 from repro.core.futures import FuturizedGraph, Lane
 from repro.data.pipeline import Prefetcher
 from repro.distrib import (DistributedGraph, ObjectDirectory, RemoteRef)
@@ -248,6 +254,84 @@ def test_worker_loss_respawns_in_flight_tasks():
         dg.shutdown()
 
 
+# -- locality-owned checkpoint shards -----------------------------------------
+
+def _ckpt_tree(k=0):
+    rng = np.random.default_rng(k)
+    return {"w": rng.normal(size=(6, 4)).astype(np.float32),
+            "b": np.arange(5, dtype=np.int32),
+            "nested": {"s": np.float32(1.5),
+                       "t": np.arange(3.0, dtype=np.float64)}}
+
+
+def _assert_tree_equal(t, back):
+    import jax
+
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_distributed_save_shards_written_by_owners(cluster, tmp_path):
+    """Each locality writes its own shard: the ownership map must cover
+    the driver AND both workers (writer rank is recorded from
+    PHYRAX_LOCALITY_RANK inside the executing process, so this proves
+    the writes really ran there)."""
+    cm = CheckpointManager(tmp_path, graph=cluster.graph, dgraph=cluster)
+    t = _ckpt_tree(1)
+    cm.save(4, t, meta={"who": "owners"})
+    cm.wait()
+    m = load_manifest(tmp_path / "step_00000004")
+    assert set(m["ownership"]) == {"0", "1", "2"}    # 4 leaves, 3 ranks
+    assert m["n_shards"] == 3 and m["n_leaves"] == 4
+    # restore spreads shard reads over the same localities
+    step, back = cm.restore(t)
+    assert step == 4
+    _assert_tree_equal(t, back)
+    assert cm.meta["who"] == "owners"
+
+
+def test_corrupt_shard_error_crosses_the_wire(cluster, tmp_path):
+    """CheckpointCorruptError raised inside a worker's read_shard task
+    re-raises at the driver and names the bad shard."""
+    cm = CheckpointManager(tmp_path, graph=cluster.graph, dgraph=cluster)
+    t = _ckpt_tree(2)
+    cm.save(1, t)
+    cm.wait()
+    f = tmp_path / "step_00000001" / "shard_00001.bin"
+    raw = bytearray(f.read_bytes())
+    raw[-1] ^= 0xFF
+    f.write_bytes(bytes(raw))
+    with pytest.raises(CheckpointCorruptError, match="shard_00001.bin"):
+        cm.restore(t)
+    step, _ = cm.restore(t, strict_checksums=False)
+    assert step == 1
+
+
+def test_save_completes_when_owner_locality_killed(tmp_path):
+    """The failure drill: a shard's owning locality is SIGKILLed before
+    its write dispatches; the idempotent task re-targets the driver and
+    the manifest still commits - never a torn checkpoint."""
+    g = FuturizedGraph(max_workers=2, name="ckpt-kill")
+    dg = DistributedGraph(localities=2, graph=g, name="ckpt-kill")
+    try:
+        cm = CheckpointManager(tmp_path, graph=g, dgraph=dg)
+        hold = g.promise(name="hold")
+        t = _ckpt_tree(3)
+        cm.save(3, t, deps=(hold,))      # shard 1 owned by worker 1
+        dg.group.kill(1)
+        hold.set_result(None)
+        cm.wait()
+        m = load_manifest(tmp_path / "step_00000003")
+        assert m["n_shards"] == 2
+        assert set(m["ownership"]) == {"0"}    # fallback writer: driver
+        step, back = cm.restore(t)
+        assert step == 3
+        _assert_tree_equal(t, back)
+    finally:
+        dg.shutdown()
+        g.shutdown(wait=True)
+
+
 # -- Session parity -----------------------------------------------------------
 
 def _plan(**kw):
@@ -283,3 +367,29 @@ def test_session_train_two_localities_matches_single_even_killed():
     assert abs(out["final_loss"] - ref["final_loss"]) < 1e-4
     assert dstats["dispatched"].get(1, 0) > 0
     assert dstats["alive_workers"] == []         # the drill really killed it
+
+
+def test_train_resharded_restore_2_to_1_and_2_to_3(tmp_path):
+    """The acceptance round-trip: a 2-locality run writes locality-owned
+    shards; restoring into 1 AND into 3 localities continues training
+    with bit-identical loss to an uninterrupted single-process run."""
+    steps, kw = 6, dict(log_every=3, verbose=False)
+    with _plan().compile() as ref_s:
+        ref = ref_s.train(steps=steps, **kw)
+
+    ck = str(tmp_path / "ck")
+    with _plan(localities=2, ckpt_dir=ck).compile() as writer:
+        writer.train(steps=4, ckpt_every=4, **kw)
+    m = load_manifest(Path(ck) / "step_00000004")
+    assert set(m["ownership"]) == {"0", "1"}     # both localities wrote
+
+    ck2 = str(tmp_path / "ck2")                  # second copy: each resume
+    shutil.copytree(ck, ck2)                     # writes new checkpoints
+
+    with _plan().compile() as single:            # N=2 -> M=1
+        out1 = single.train(steps=steps, ckpt_dir=ck, resume=True, **kw)
+    with _plan(localities=3).compile() as multi:  # N=2 -> M=3
+        out3 = multi.train(steps=steps, ckpt_dir=ck2, resume=True, **kw)
+
+    assert out1["final_loss"] == pytest.approx(ref["final_loss"], abs=1e-6)
+    assert out3["final_loss"] == pytest.approx(ref["final_loss"], abs=1e-6)
