@@ -1,15 +1,21 @@
 """Locality-owned sharded checkpoints (DESIGN.md §10).
 
-``format`` is the byte-level contract - shard files, the driver-written
-manifest (tree structure, shard->locality ownership map, per-shard
-checksums), atomic rename commit; ``checkpoint`` is the futurized I/O
-layer that schedules save/load shard tasks on their owning localities
-and reshards on restore (N writers -> M readers, M=1 included)."""
+``format`` is the byte-level contract - shard files of (possibly
+device-shard) segments, the driver-written manifest (tree structure,
+shard->locality ownership map, per-shard checksums), atomic rename
+commit; ``checkpoint`` is the futurized I/O layer that schedules
+save/load shard tasks on their owning localities and reshards on
+restore (N writers -> M readers, M=1 included); ``spmd`` is the
+multi-host save path, where every ``jax.distributed`` process
+serializes only the addressable shards of its global arrays."""
 from .checkpoint import CheckpointManager  # noqa: F401
-from .format import (CheckpointCorruptError, assign_shards,  # noqa: F401
-                     build_manifest, commit_manifest, load_manifest,
-                     read_shard, save_shard)
+from .format import (CheckpointCorruptError, assemble_leaf,  # noqa: F401
+                     assign_shards, build_manifest, commit_manifest,
+                     load_manifest, read_shard, read_shard_segments,
+                     save_shard)
+from .spmd import write_spmd_shard  # noqa: F401
 
-__all__ = ["CheckpointCorruptError", "CheckpointManager", "assign_shards",
-           "build_manifest", "commit_manifest", "load_manifest",
-           "read_shard", "save_shard"]
+__all__ = ["CheckpointCorruptError", "CheckpointManager", "assemble_leaf",
+           "assign_shards", "build_manifest", "commit_manifest",
+           "load_manifest", "read_shard", "read_shard_segments",
+           "save_shard", "write_spmd_shard"]

@@ -29,6 +29,20 @@ Properties the launcher relies on:
   * elastic restore: leaves are ``device_put`` against the *current*
     mesh's shardings - a snapshot written on one mesh restores onto any
     other topology.
+
+Multi-host SPMD mode (``jax.distributed`` active, DESIGN.md §10): the
+save path switches from host copies to *addressable shards*.  This
+process (the driver, jax process 0) writes only the blocks it
+addresses; every other process writes its own blocks from inside its
+shadow train loop (``frontend.spmd``) and ships back just the manifest
+ENTRY - metadata - as an active message, which resolves a
+``DistributedGraph.spmd_entry_futures`` promise here.  No leaf bytes
+cross the messaging layer in either direction
+(``stats()["ckpt_leaf_wire_bytes"]`` stays 0); the driver still
+assembles and atomically commits the manifest.  A writer lost mid-save
+is unrecoverable in SPMD mode - nobody else holds its bytes - so the
+save ABORTS (never commits, counted in ``aborted_saves``) instead of
+re-spawning, and the previous checkpoint stays latest.
 """
 from __future__ import annotations
 
@@ -40,7 +54,9 @@ import jax
 import numpy as np
 
 from ..core.futures import FuturizedGraph, Lane, PhyFuture
+from ..distrib.runtime import LocalityLostError
 from . import format as fmt
+from . import spmd
 from .format import CheckpointCorruptError
 
 __all__ = ["CheckpointCorruptError", "CheckpointManager"]
@@ -58,6 +74,17 @@ def _prepare_tmp(tmp: str, *_deps):
     if p.exists():
         shutil.rmtree(p)
     p.mkdir(parents=True)
+    return None
+
+
+def _prepare_tmp_spmd(tmp: str, *_deps):
+    """The SPMD save gate: same edge collapse, but NO wipe - the other
+    processes' shadow loops may already have streamed their shard files
+    into the temp dir before the driver's gate runs (they pace
+    themselves, not the driver).  Stale files from an aborted earlier
+    attempt are instead pruned at commit: ``format.commit_manifest``
+    deletes everything the manifest does not reference."""
+    Path(tmp).mkdir(parents=True, exist_ok=True)
     return None
 
 
@@ -108,6 +135,8 @@ class CheckpointManager:
             self._graph = graph if graph is not None else FuturizedGraph(
                 max_workers=2, name="checkpoint")
         self._pending: Optional[PhyFuture] = None
+        self._pending_step: Optional[int] = None
+        self.aborted_saves = 0          # SPMD saves lost with a writer
 
     # -- placement ------------------------------------------------------------
     def ranks(self) -> list[int]:
@@ -149,7 +178,16 @@ class CheckpointManager:
 
         Fail fast: if the previous async save already finished with an
         error, raise it here rather than silently poisoning every later
-        write in the dependency chain until close().
+        write in the dependency chain until close().  Exception: an SPMD
+        save aborted because its writer died (``LocalityLostError``) is
+        *expected* under host loss - it never committed, the previous
+        checkpoint stays latest - so it is counted (``aborted_saves``)
+        and warned about, not raised.
+
+        In SPMD mode (``jax.distributed`` with more than one process)
+        the snapshot is written as addressable shards: see the module
+        docstring.  ``async_save=False`` is unsupported there (a sync
+        save cannot await the other processes' entries).
 
         Args:
             step: step number the snapshot belongs to.
@@ -160,11 +198,9 @@ class CheckpointManager:
             The manifest-commit ``PhyFuture`` (resolving to the committed
             directory) when async; the committed ``Path`` when sync.
         """
-        if self._pending is not None and self._pending.done():
-            failed, self._pending = self._pending, None
-            exc = failed.exception()
-            if exc is not None:
-                raise exc
+        self._raise_if_failed()
+        if spmd.is_multiprocess():
+            return self._save_spmd(step, tree, meta=meta, deps=deps)
         leaves, treedef = jax.tree.flatten(tree)
         host = [np.asarray(x) for x in leaves]
         treedef_str = str(treedef)
@@ -186,19 +222,74 @@ class CheckpointManager:
         gate = self._graph.defer(_prepare_tmp, str(tmp), *order,
                                  lane=Lane.CHECKPOINT,
                                  name=f"ckpt:gate:{step}")
-        entry_futs = [
-            self._defer_on(rank, fmt.save_shard, str(tmp), sid,
-                           list(idx), [host[i] for i in idx], gate,
-                           name=f"ckpt:shard{sid}:{step}")
-            for sid, rank, idx in shards]
+        entry_futs = []
+        for sid, rank, idx in shards:
+            if rank != 0 and self._dgraph is not None:
+                # host-copy mode ships the owner its leaf bytes in the
+                # spawn payload; the counter is what the SPMD-mode
+                # regression test asserts stays 0
+                self._dgraph.account_ckpt_leaf_bytes(
+                    sum(host[i].nbytes for i in idx))
+            entry_futs.append(
+                self._defer_on(rank, fmt.save_shard, str(tmp), sid,
+                               list(idx), [host[i] for i in idx], gate,
+                               name=f"ckpt:shard{sid}:{step}"))
         self._pending = self._graph.defer(
             self._commit, step, treedef_str, len(host), meta,
             str(tmp), str(final), *entry_futs,
             lane=Lane.CHECKPOINT, name=f"ckpt:manifest:{step}")
+        self._pending_step = step
+        return self._pending
+
+    # -- SPMD save (addressable shards; DESIGN.md §10) -------------------------
+    def _save_spmd(self, step: int, tree: Any, *, meta, deps) -> PhyFuture:
+        if not self.async_save:
+            raise RuntimeError(
+                "async_save=False is unsupported in SPMD mode: a "
+                "synchronous save cannot await the other processes' "
+                "shard entries")
+        rank, world = jax.process_index(), jax.process_count()
+        if rank != 0:
+            raise RuntimeError(
+                "CheckpointManager.save drives SPMD saves from jax "
+                "process 0 (the driver); other processes write their "
+                "shards via checkpoint.spmd.write_spmd_shard "
+                "(frontend.spmd shadow loop)")
+        leaves, treedef = jax.tree.flatten(tree)
+        # capture THIS process's addressable blocks now (host copies),
+        # before the caller's next step can donate the buffers
+        indices, slices, arrays = spmd.collect_segments(tree)
+        tmp = self.dir / f".tmp_step_{step:08d}"
+        final = self.dir / f"step_{step:08d}"
+        order = deps if self._pending is None else (*deps, self._pending)
+        gate = self._graph.defer(_prepare_tmp_spmd, str(tmp), *order,
+                                 lane=Lane.CHECKPOINT,
+                                 name=f"ckpt:gate:{step}")
+        # the driver's own shard: a local node - nothing ships anywhere
+        mine = self._graph.defer(fmt.save_shard, str(tmp), rank,
+                                 indices, arrays, gate, slices=slices,
+                                 lane=Lane.CHECKPOINT,
+                                 name=f"ckpt:shard{rank}:{step}")
+        others = []
+        if world > 1:
+            if self._dgraph is None:
+                raise RuntimeError(
+                    "SPMD save needs a DistributedGraph to receive the "
+                    "other processes' shard entries (Session passes it; "
+                    "pass dgraph= for standalone use)")
+            others = self._dgraph.spmd_entry_futures(
+                step, [r for r in range(world) if r != rank])
+        self._pending = self._graph.defer(
+            self._commit, step, str(treedef), len(leaves), meta,
+            str(tmp), str(final), mine, *others,
+            lane=Lane.CHECKPOINT, name=f"ckpt:manifest:{step}")
+        self._pending_step = step
         return self._pending
 
     def _commit(self, step, treedef_str, n_leaves, meta, tmp, final,
                 *entries) -> Path:
+        # a rank that addressed no replica-0 block contributes no shard
+        entries = [e for e in entries if e is not None]
         manifest = fmt.build_manifest(step=step, treedef=treedef_str,
                                       n_leaves=n_leaves,
                                       shards=list(entries), meta=meta)
@@ -206,11 +297,41 @@ class CheckpointManager:
         self._gc()
         return out
 
+    def _raise_if_failed(self):
+        """Surface a finished-failed pending save.  A LocalityLostError
+        in SPMD mode means a writer died holding bytes nobody else has:
+        the save aborted atomically (no manifest), which is survivable -
+        warn and count it instead of killing the run."""
+        if self._pending is None or not self._pending.done():
+            return
+        failed, self._pending = self._pending, None
+        step, self._pending_step = self._pending_step, None
+        exc = failed.exception()
+        if exc is None:
+            return
+        if isinstance(exc, LocalityLostError) and spmd.is_multiprocess():
+            self.aborted_saves += 1
+            if step is not None:
+                # reclaim the aborted attempt's temp dir now: _gc only
+                # prunes temp dirs a LATER commit supersedes, and with a
+                # writer permanently gone there may never be one - the
+                # driver's full shard per abort would pile up
+                shutil.rmtree(self.dir / f".tmp_step_{step:08d}",
+                              ignore_errors=True)
+            print(f"[ckpt] WARNING: SPMD save aborted, previous "
+                  f"checkpoint stays latest: {exc}", flush=True)
+            return
+        raise exc
+
     def wait(self):
-        """Barrier: block until every pending save has committed."""
+        """Barrier: block until every pending save has committed (or, in
+        SPMD mode, aborted with its lost writer - see ``save``)."""
         if self._pending is not None:
-            self._pending.result()
-            self._pending = None
+            try:
+                self._pending.result()
+                self._pending = None
+            except LocalityLostError:
+                self._raise_if_failed()
 
     def close(self):
         """Shutdown barrier: drain pending saves; stop our workers if we
@@ -261,13 +382,17 @@ class CheckpointManager:
         Shards are read by the CURRENT localities (spread round-robin
         over the driver + alive workers), which need not be the writers:
         a checkpoint written by N localities restores into M, including
-        M=1.  Leaves are ``device_put`` against ``shardings`` (same
-        structure) for elastic mesh restore.
+        M=1.  An SPMD checkpoint's device-shard segments are re-joined
+        per leaf (``format.assemble_leaf``) - the process count may have
+        changed arbitrarily.  Leaves are placed against ``shardings``
+        (same structure) for elastic mesh restore; a sharding spanning
+        processes is honored without a single-host round-trip
+        (``spmd.device_put_maybe_global``).
 
         Args:
             like: pytree giving the structure (and leaf count) expected.
             step: step to load; latest when None.
-            shardings: optional shardings pytree for ``device_put``.
+            shardings: optional shardings pytree for placement.
             strict_checksums: verify per-leaf + per-shard checksums.
         Returns:
             ``(step, tree)``.
@@ -289,27 +414,34 @@ class CheckpointManager:
             raise ValueError(
                 f"checkpoint has {manifest['n_leaves']} leaves, "
                 f"expected {len(leaves_like)}")
-        by_index: dict[int, np.ndarray] = {}
-        for part in self._read_shards(d, manifest["shards"],
+        parts: dict[int, list] = {}
+        for segs in self._read_shards(d, manifest["shards"],
                                       strict_checksums):
-            by_index.update(part)
-        missing = [i for i in range(len(leaves_like)) if i not in by_index]
+            for seg in segs:
+                parts.setdefault(seg["index"], []).append(seg)
+        missing = [i for i in range(len(leaves_like)) if i not in parts]
         if missing:
             raise CheckpointCorruptError(
                 f"{d}: leaves {missing} missing from every shard")
+        by_index = {i: fmt.assemble_leaf(i, segs)
+                    for i, segs in parts.items()}
         sh_leaves = (jax.tree.leaves(shardings) if shardings is not None
                      else [None] * len(leaves_like))
-        out = [jax.device_put(by_index[i], sh) if sh is not None
-               else jax.numpy.asarray(by_index[i])
+        out = [spmd.device_put_maybe_global(by_index[i], sh)
                for i, sh in enumerate(sh_leaves)]
         return step, jax.tree.unflatten(treedef, out)
 
     def _read_shards(self, d: Path, entries: list, verify: bool) -> list:
         ranks = self.ranks()
-        if self._dgraph is None or len(ranks) == 1:
-            return [fmt.read_shard(str(d), e, verify=verify)
+        # SPMD mode reads locally: worker localities run shadow loops
+        # (each restores its own copy), and shipping segment bytes back
+        # over the wire is exactly what this mode exists to avoid
+        if self._dgraph is None or len(ranks) == 1 \
+                or spmd.is_multiprocess():
+            return [fmt.read_shard_segments(str(d), e, verify=verify)
                     for e in entries]
-        futs = [self._defer_on(ranks[i % len(ranks)], fmt.read_shard,
+        futs = [self._defer_on(ranks[i % len(ranks)],
+                               fmt.read_shard_segments,
                                str(d), e, verify=verify,
                                name=f"ckpt:load:{e['file']}")
                 for i, e in enumerate(entries)]

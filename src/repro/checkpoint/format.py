@@ -15,11 +15,19 @@ Layout (one directory per step):
         shard_00000.bin     the leaves owned by locality 0
         shard_00001.bin     the leaves owned by locality 1 ...
 
-A shard file is the concatenation of raw ``.npy`` segments (one per
-leaf); the manifest records each leaf's byte offset and length, so any
-single leaf is loadable without parsing a container format - and a
-flipped byte is caught by a checksum mismatch (``CheckpointCorruptError``
+A shard file is the concatenation of raw ``.npy`` segments; the
+manifest records each segment's byte offset and length, so any single
+segment is loadable without parsing a container format - and a flipped
+byte is caught by a checksum mismatch (``CheckpointCorruptError``
 naming the shard), never by a zip CRC blowing up the parse.
+
+A segment is usually a whole leaf, but under multi-host SPMD saves
+(DESIGN.md §10) a leaf may be split into *device-shard* segments: each
+process persists exactly the blocks of the global array it can address
+(``jax.Array.addressable_shards``), so a segment then also records the
+``slice`` of the global leaf it holds plus the leaf's ``global_shape``.
+``assemble_leaf`` re-joins segments (from any number of shard files)
+into the full leaf at restore, verifying exact coverage.
 
 Invariants the I/O layer relies on:
   * ``save_shard`` is idempotent and atomic (write-ahead temp file +
@@ -50,11 +58,14 @@ from typing import Iterable, Optional
 import numpy as np
 
 __all__ = ["CheckpointCorruptError", "FORMAT_VERSION", "MANIFEST_NAME",
-           "assign_shards", "build_manifest", "commit_manifest",
-           "leaf_checksum", "load_manifest", "read_shard", "save_shard",
+           "assemble_leaf", "assign_shards", "build_manifest",
+           "commit_manifest", "leaf_checksum", "load_manifest",
+           "read_shard", "read_shard_segments", "save_shard",
            "shard_checksum", "shard_filename", "writer_rank"]
 
-FORMAT_VERSION = "phyrax-ckpt/2"
+FORMAT_VERSION = "phyrax-ckpt/3"
+# phyrax-ckpt/2 checkpoints (whole-leaf segments only) read unchanged
+COMPAT_VERSIONS = frozenset({"phyrax-ckpt/2", FORMAT_VERSION})
 MANIFEST_NAME = "manifest.json"
 
 
@@ -125,7 +136,7 @@ def assign_shards(n_leaves: int, ranks) -> list[tuple[int, int, list[int]]]:
 
 
 def save_shard(directory: str, shard_id: int, indices, arrays,
-               *_deps) -> dict:
+               *_deps, slices=None) -> dict:
     """Write one shard file (idempotent, atomic) and return its manifest
     entry.
 
@@ -138,29 +149,44 @@ def save_shard(directory: str, shard_id: int, indices, arrays,
             missing - concurrent writers race benignly on mkdir).
         shard_id: shard index within the checkpoint.
         indices: global leaf indices stored in this shard, in order.
-        arrays: the leaf values (numpy) matching ``indices``.
+            The same index may repeat when a leaf is split into
+            device-shard segments.
+        arrays: the segment values (numpy) matching ``indices``.
+        slices: optional parallel list; entry ``i`` is None for a whole
+            leaf, or ``(slice_pairs, global_shape)`` where
+            ``slice_pairs`` is ``[[start, stop], ...]`` per dimension of
+            the global leaf - the SPMD addressable-shard save path
+            (DESIGN.md §10).
     Returns:
-        The shard's manifest entry: file name, writer locality, per-leaf
-        byte offsets / shapes / dtypes / checksums, and a shard-level
-        checksum.
+        The shard's manifest entry: file name, writer locality,
+        per-segment byte offsets / shapes / dtypes / checksums (plus
+        ``slice``/``global_shape`` for device-shard segments), and a
+        shard-level checksum.
     """
     d = Path(directory)
     d.mkdir(parents=True, exist_ok=True)
     name = shard_filename(shard_id)
     leaves, offset = [], 0
+    if slices is None:
+        slices = [None] * len(list(indices))
     tmp = d / f"{name}.wip-{os.getpid()}"
-    # stream leaf by leaf: only one serialized blob is in memory at a
-    # time, not the whole shard
+    # stream segment by segment: only one serialized blob is in memory
+    # at a time, not the whole shard
     with open(tmp, "wb") as f:
-        for idx, a in zip(indices, arrays):
+        for idx, a, sl in zip(indices, arrays, slices):
             a = np.asarray(a)
             buf = io.BytesIO()
             np.save(buf, a)
             blob = buf.getvalue()
-            leaves.append({"index": int(idx), "shape": list(a.shape),
-                           "dtype": str(a.dtype),
-                           "offset": offset, "nbytes": len(blob),
-                           "checksum": leaf_checksum(a)})
+            entry = {"index": int(idx), "shape": list(a.shape),
+                     "dtype": str(a.dtype),
+                     "offset": offset, "nbytes": len(blob),
+                     "checksum": leaf_checksum(a)}
+            if sl is not None:
+                pairs, global_shape = sl
+                entry["slice"] = [[int(s), int(e)] for s, e in pairs]
+                entry["global_shape"] = [int(n) for n in global_shape]
+            leaves.append(entry)
             f.write(blob)
             offset += len(blob)
     os.replace(tmp, d / name)     # atomic: re-runs converge, never tear
@@ -169,19 +195,21 @@ def save_shard(directory: str, shard_id: int, indices, arrays,
             "checksum": shard_checksum(e["checksum"] for e in leaves)}
 
 
-def read_shard(directory: str, entry: dict, *, verify: bool = True) -> dict:
-    """Read one shard file back into ``{global_leaf_index: array}``.
+def read_shard_segments(directory: str, entry: dict, *,
+                        verify: bool = True) -> list:
+    """Read one shard file back as a list of segments.
 
     Runs on *any* locality - a resharded restore does not need the
-    writer; with ``verify`` every leaf is re-checksummed against the
+    writer; with ``verify`` every segment is re-checksummed against the
     manifest entry.
 
     Args:
         directory: the committed step directory.
         entry: this shard's manifest entry (``manifest["shards"][i]``).
-        verify: verify per-leaf checksums plus the shard checksum.
+        verify: verify per-segment checksums plus the shard checksum.
     Returns:
-        Mapping of global leaf index -> numpy array.
+        List of ``{"index", "slice", "global_shape", "array"}`` dicts;
+        ``slice``/``global_shape`` are None for whole-leaf segments.
     Raises:
         CheckpointCorruptError: the shard file is missing, truncated, or
             fails verification; the message names the shard (and leaf).
@@ -192,7 +220,7 @@ def read_shard(directory: str, entry: dict, *, verify: bool = True) -> dict:
     except OSError as e:
         raise CheckpointCorruptError(
             f"shard {entry['file']} unreadable in {directory}: {e}") from e
-    out: dict[int, np.ndarray] = {}
+    out: list[dict] = []
     sums = []
     for leaf in entry["leaves"]:
         blob = raw[leaf["offset"]:leaf["offset"] + leaf["nbytes"]]
@@ -214,10 +242,98 @@ def read_shard(directory: str, entry: dict, *, verify: bool = True) -> dict:
                     f"checksum mismatch in shard {entry['file']} "
                     f"(leaf {leaf['index']}) - refusing to load a corrupt "
                     f"checkpoint")
-        out[int(leaf["index"])] = a
+        out.append({"index": int(leaf["index"]),
+                    "slice": leaf.get("slice"),
+                    "global_shape": leaf.get("global_shape"),
+                    "array": a})
     if verify and shard_checksum(sums) != entry["checksum"]:
         raise CheckpointCorruptError(
             f"shard checksum mismatch in {entry['file']}")
+    return out
+
+
+def read_shard(directory: str, entry: dict, *, verify: bool = True) -> dict:
+    """Read one whole-leaf shard file back into
+    ``{global_leaf_index: array}``.
+
+    Thin wrapper over ``read_shard_segments`` for shards whose segments
+    are full leaves (every host-copy-mode shard).  Shards holding
+    device-shard segments span leaves across files and must be
+    assembled via ``read_shard_segments`` + ``assemble_leaf`` instead.
+
+    Args:
+        directory: the committed step directory.
+        entry: this shard's manifest entry (``manifest["shards"][i]``).
+        verify: verify per-segment checksums plus the shard checksum.
+    Returns:
+        Mapping of global leaf index -> numpy array.
+    Raises:
+        CheckpointCorruptError: corrupt shard, or a sliced (device-shard)
+            segment that this whole-leaf API cannot represent.
+    """
+    out: dict[int, np.ndarray] = {}
+    for seg in read_shard_segments(directory, entry, verify=verify):
+        if seg["slice"] is not None:
+            raise CheckpointCorruptError(
+                f"shard {entry['file']} leaf {seg['index']} is a "
+                f"device-shard segment (SPMD save); use "
+                f"read_shard_segments + assemble_leaf")
+        out[seg["index"]] = seg["array"]
+    return out
+
+
+def assemble_leaf(leaf_index: int, segments: list) -> np.ndarray:
+    """Re-join one leaf from its segments (possibly from several shard
+    files - the N->M restore of an SPMD checkpoint).
+
+    Args:
+        leaf_index: global leaf index (for error messages).
+        segments: this leaf's ``read_shard_segments`` dicts.
+    Returns:
+        The full leaf as a numpy array.
+    Raises:
+        CheckpointCorruptError: no segments, a whole-leaf segment mixed
+            with sliced ones, disagreeing global shapes, or segments
+            that do not cover the leaf exactly.
+    """
+    if not segments:
+        raise CheckpointCorruptError(f"leaf {leaf_index}: no segments")
+    whole = [s for s in segments if s["slice"] is None]
+    if whole:
+        if len(segments) != 1:
+            raise CheckpointCorruptError(
+                f"leaf {leaf_index}: whole-leaf segment duplicated or "
+                f"mixed with device-shard segments")
+        return whole[0]["array"]
+    shapes = {tuple(s["global_shape"]) for s in segments}
+    if len(shapes) != 1:
+        raise CheckpointCorruptError(
+            f"leaf {leaf_index}: segments disagree on the global shape "
+            f"({sorted(shapes)})")
+    shape = shapes.pop()
+    out = np.empty(shape, dtype=segments[0]["array"].dtype)
+    covered = 0
+    boxes = [seg["slice"] for seg in segments]
+    # disjointness + total count == exact cover (overlapping segments
+    # would hide an uncovered - uninitialized - region from the count)
+    for i, a in enumerate(boxes):
+        for b in boxes[i + 1:]:
+            if all(s1 < e2 and s2 < e1
+                   for (s1, e1), (s2, e2) in zip(a, b)):
+                raise CheckpointCorruptError(
+                    f"leaf {leaf_index}: segments {a} and {b} overlap")
+    for seg in segments:
+        sl = tuple(slice(s, e) for s, e in seg["slice"])
+        if out[sl].shape != seg["array"].shape:
+            raise CheckpointCorruptError(
+                f"leaf {leaf_index}: segment slice {seg['slice']} does "
+                f"not match its array shape {seg['array'].shape}")
+        out[sl] = seg["array"]
+        covered += seg["array"].size
+    if covered != out.size:
+        raise CheckpointCorruptError(
+            f"leaf {leaf_index}: segments cover {covered} of {out.size} "
+            f"elements - a device shard is missing from every shard file")
     return out
 
 
@@ -267,11 +383,14 @@ def commit_manifest(tmp_dir, final_dir, manifest: dict) -> Path:
         ``final_dir`` as a ``Path``.
     """
     tmp_dir, final_dir = Path(tmp_dir), Path(final_dir)
-    # a writer killed mid-save_shard leaves its write-ahead file behind;
-    # every shard entry has resolved by now, so any .wip-* is a dead
-    # writer's orphan and must not be committed
-    for stale in tmp_dir.glob("*.wip-*"):
-        stale.unlink()
+    # every shard entry has resolved by now, so anything the manifest
+    # does not reference is a dead writer's orphan - a .wip-* write-ahead
+    # file, or a stale shard from an aborted attempt with a different
+    # world size - and must not be committed
+    referenced = {e["file"] for e in manifest.get("shards", [])}
+    for p in tmp_dir.iterdir():
+        if p.name != MANIFEST_NAME and p.name not in referenced:
+            p.unlink()
     (tmp_dir / MANIFEST_NAME).write_text(json.dumps(manifest, indent=1))
     if final_dir.exists():
         shutil.rmtree(final_dir)
@@ -299,8 +418,9 @@ def load_manifest(step_dir) -> dict:
     except json.JSONDecodeError as e:
         raise CheckpointCorruptError(
             f"manifest in {step_dir} does not parse: {e}") from e
-    if manifest.get("format") != FORMAT_VERSION:
+    if manifest.get("format") not in COMPAT_VERSIONS:
         raise CheckpointCorruptError(
             f"{step_dir}: unsupported checkpoint format "
-            f"{manifest.get('format')!r} (want {FORMAT_VERSION!r})")
+            f"{manifest.get('format')!r} (want one of "
+            f"{sorted(COMPAT_VERSIONS)})")
     return manifest

@@ -115,6 +115,7 @@ class Locality:
         ep.register("shutdown", lambda src, p: self._stop.set())
         ep.register("ping", lambda src, p: p)
         ep.register("stats", self._on_stats)
+        ep.register("spmd_train", self._on_spmd_train)
         ep.on_peer_lost = self._on_peer_lost
 
     # -- handlers ------------------------------------------------------------
@@ -183,6 +184,27 @@ class Locality:
         if rank == 0:               # driver died: nothing left to serve
             self._stop.set()
 
+    def _on_spmd_train(self, src: int, spec: dict):
+        """Run the SPMD shadow train loop (DESIGN.md §10) on its own
+        thread: this locality mirrors the driver's device computation
+        in lockstep and writes its own addressable checkpoint shards,
+        posting back only the manifest entries.  Completion (or the
+        failure) is reported via a ``spmd_done`` post."""
+        def run():
+            try:
+                from ..frontend.spmd import shadow_train
+                step = shadow_train(spec, endpoint=self.endpoint)
+                msg = {"rank": self.rank, "ok": True, "step": step}
+            except BaseException as e:  # noqa: BLE001 - shipped back
+                msg = {"rank": self.rank, "ok": False,
+                       "error": f"{type(e).__name__}: {e}"}
+            try:
+                self.endpoint.post(src, "spmd_done", msg)
+            except PeerLostError:
+                pass
+        threading.Thread(target=run, daemon=True,
+                         name=f"spmd-shadow-{self.rank}").start()
+
     # -- lifecycle -----------------------------------------------------------
     def serve(self, driver_addr: tuple[str, int]):
         """Connect to the driver, announce ourselves, and serve active
@@ -221,8 +243,28 @@ def worker_main(rank: int, world: int, driver_addr, env: Optional[dict] = None):
         os.makedirs(ckpt_dir, exist_ok=True)
     from ..launch.mesh import maybe_init_jax_distributed
 
-    maybe_init_jax_distributed(process_id=rank, num_processes=world)
+    spmd = maybe_init_jax_distributed(process_id=rank, num_processes=world)
+    if spmd:
+        # the multi-process CPU backend exchanges local topologies over
+        # the coordination service: every process must CREATE its
+        # backend before any of them can.  Warm ours on a thread so
+        # serve() (and the hello the driver is waiting on) is not gated
+        # on the driver reaching its own first jax call.
+        def _warm():
+            try:
+                jax.local_devices()
+            except Exception:  # noqa: BLE001 - surfaces at first jax use
+                pass
+        threading.Thread(target=_warm, daemon=True,
+                         name=f"jax-backend-warm-{rank}").start()
     Locality(rank, world).serve(tuple(driver_addr))
+    if spmd:
+        # coordinated teardown: the jax.distributed shutdown barrier
+        # needs every process; the driver joins it in Session.close
+        try:
+            jax.distributed.shutdown()
+        except Exception:  # noqa: BLE001 - best-effort on the way out
+            pass
 
 
 # ---------------------------------------------------------------------------
@@ -367,6 +409,8 @@ class DistributedGraph:
         self.endpoint = self.group.endpoint
         self.directory = ObjectDirectory(0, self.endpoint)
         self.endpoint.register("task_done", self._on_task_done)
+        self.endpoint.register("ckpt_entries", self._on_ckpt_entries)
+        self.endpoint.register("spmd_done", self._on_spmd_done)
         self.endpoint.on_peer_lost = self._on_peer_lost
         self._outstanding: dict[str, _TaskRecord] = {}
         self._by_future: dict[int, _TaskRecord] = {}   # id(promise) -> rec
@@ -375,6 +419,13 @@ class DistributedGraph:
         self._rr = {lane: itertools.count() for lane in Lane}
         self.dispatched = collections.Counter()        # per-locality sends
         self.respawned = 0
+        # checkpoint leaf bytes shipped in save payloads (host-copy
+        # mode); the SPMD regression test asserts this stays 0 there
+        self.ckpt_leaf_wire_bytes = 0
+        # (step, rank) -> entry promise (save registered first) or the
+        # buffered entry value (the worker's post arrived first)
+        self._spmd_entries: dict[tuple[int, int], Any] = {}
+        self._spmd_done: dict[int, dict] = {}
         self._closed = False
 
     @property
@@ -611,6 +662,134 @@ class DistributedGraph:
         else:
             rec.promise.set_exception(exc, cancelled=cancelled)
 
+    # -- SPMD checkpointing (addressable shards; DESIGN.md §10) ---------------
+    def account_ckpt_leaf_bytes(self, n: int):
+        """Record ``n`` checkpoint leaf bytes about to ship in a task
+        payload (host-copy saves); SPMD saves never call this."""
+        with self._lock:
+            self.ckpt_leaf_wire_bytes += int(n)
+
+    def spmd_train(self, spec: dict):
+        """Start the SPMD shadow train loop (``frontend.spmd``) on every
+        alive worker locality: each mirrors the driver's device
+        computation in lockstep and writes its own addressable
+        checkpoint shards.
+
+        Args:
+            spec: picklable dict - ``plan``, ``steps``, ``ckpt_every``,
+                ``ckpt_dir``, ``resume``, ``stream``.
+        """
+        with self._lock:
+            self._spmd_done.clear()    # completions are per-run
+        for rank in self.group.alive_workers():
+            try:
+                self.endpoint.post(rank, "spmd_train", spec)
+            except PeerLostError:      # died since alive_workers(): its
+                pass                   # entry promises poison via peer loss
+
+    def spmd_entry_futures(self, step: int, ranks) -> list[PhyFuture]:
+        """One promise per other jax process for its shard manifest
+        entry of ``step`` - the metadata-only return channel of an SPMD
+        save.  A promise for an already-dead locality (or one whose
+        locality dies before posting) is poisoned with
+        ``LocalityLostError``: its bytes exist nowhere else, so the save
+        must abort, never commit.
+
+        Args:
+            step: the save's step number.
+            ranks: the non-driver process ranks expected to write.
+        Returns:
+            List of ``PhyFuture`` resolving to the entries (or None for
+            a rank that had nothing to write).
+        """
+        out = []
+        for r in ranks:
+            key = (int(step), int(r))
+            p = self._graph.promise(name=f"ckpt:entry{r}:{step}",
+                                    lane=Lane.CHECKPOINT)
+            settle = None
+            with self._lock:
+                done = self._spmd_done.get(int(r))
+                if key in self._spmd_entries and not isinstance(
+                        self._spmd_entries[key], PhyFuture):
+                    settle = ("value", self._spmd_entries.pop(key))
+                elif r != 0 and r not in self.group.alive_workers():
+                    settle = ("lost", f"locality {r} is not alive")
+                elif done is not None and not done.get("ok"):
+                    # the shadow ALREADY failed on a live worker: this
+                    # entry will never be posted
+                    settle = ("lost", f"SPMD shadow on locality {r} "
+                                      f"failed: {done.get('error')}")
+                else:
+                    self._spmd_entries[key] = p
+            if settle is None:
+                pass
+            elif settle[0] == "value":
+                p.set_result(settle[1])
+            else:
+                p.set_exception(LocalityLostError(
+                    f"ckpt entry for step {step}: {settle[1]}; its "
+                    f"addressable shards exist nowhere else - SPMD "
+                    f"save aborted"))
+            out.append(p)
+        return out
+
+    def _on_ckpt_entries(self, src: int, msg: dict):
+        key = (int(msg["step"]), int(msg["rank"]))
+        with self._lock:
+            cur = self._spmd_entries.get(key)
+            if isinstance(cur, PhyFuture):
+                del self._spmd_entries[key]
+            else:                    # worker ahead of the driver: buffer
+                self._spmd_entries[key] = msg["entry"]
+                cur = None
+        if cur is not None:
+            cur.set_result(msg["entry"])
+
+    def _on_spmd_done(self, src: int, msg: dict):
+        with self._lock:
+            self._spmd_done[int(msg["rank"])] = msg
+            self._lock.notify_all()
+        if not msg.get("ok"):
+            # the shadow died: entries it still owes will never arrive
+            self._poison_spmd_entries(
+                int(msg["rank"]),
+                f"SPMD shadow on locality {msg['rank']} failed: "
+                f"{msg.get('error')}")
+
+    def _poison_spmd_entries(self, rank: int, reason: str):
+        with self._lock:
+            pend = [(k, v) for k, v in self._spmd_entries.items()
+                    if k[1] == rank and isinstance(v, PhyFuture)]
+            for k, _ in pend:
+                del self._spmd_entries[k]
+        for _, p in pend:
+            p.set_exception(LocalityLostError(reason))
+
+    def wait_spmd_done(self, timeout: float = 600.0) -> dict:
+        """Block until every *alive* worker's shadow train loop reported
+        completion (a killed worker is excused - its saves aborted).
+
+        Returns:
+            ``{rank: done message}`` as received.
+        Raises:
+            TimeoutError: an alive worker's shadow did not finish.
+        """
+        deadline = time.monotonic() + timeout
+
+        def ready():
+            alive = set(self.group.alive_workers())
+            return all(r in self._spmd_done for r in alive)
+
+        with self._lock:
+            ok = self._lock.wait_for(
+                ready, timeout=max(0.0, deadline - time.monotonic()))
+            done = dict(self._spmd_done)
+        if not ok:
+            raise TimeoutError("SPMD shadow train loops still running "
+                               f"after {timeout}s")
+        return done
+
     # -- wire handlers --------------------------------------------------------
     def _on_task_done(self, src: int, msg: dict):
         with self._lock:
@@ -627,6 +806,11 @@ class DistributedGraph:
 
     def _on_peer_lost(self, rank: int):
         self.group.note_lost(rank)
+        # SPMD shard entries die with their writer: poison, never re-spawn
+        self._poison_spmd_entries(
+            rank, f"locality {rank} died before shipping its shard "
+                  f"entry; its addressable shards exist nowhere else - "
+                  f"SPMD save aborted")
         with self._lock:
             stranded = [r for r in self._outstanding.values()
                         if r.target == rank]
@@ -669,7 +853,8 @@ class DistributedGraph:
                     "outstanding": len(self._outstanding),
                     "alive_workers": self.group.alive_workers(),
                     "bytes_sent": self.endpoint.bytes_sent,
-                    "bytes_recv": self.endpoint.bytes_recv}
+                    "bytes_recv": self.endpoint.bytes_recv,
+                    "ckpt_leaf_wire_bytes": self.ckpt_leaf_wire_bytes}
 
     def remote_stats(self, rank: int, timeout: float = 30.0) -> dict:
         """A worker locality's own ``RuntimeStats`` JSON (plus directory
@@ -705,9 +890,16 @@ class DistributedGraph:
                 pass
         with self._lock:
             stranded = list(self._outstanding.values())
+            entry_pend = [(k, v) for k, v in self._spmd_entries.items()
+                          if isinstance(v, PhyFuture)]
+            self._spmd_entries.clear()
         for rec in stranded:
             self._finish(rec, exc=LocalityLostError(
                 f"{rec.name}: distributed graph shut down"))
+        for k, p in entry_pend:        # an unresolved promise would hang
+            p.set_exception(LocalityLostError(  # the graph's barrier
+                f"ckpt entry for step {k[0]}: distributed graph shut "
+                f"down"))
         self.group.shutdown()
         if self._own_graph:
             self._graph.shutdown(wait=True)

@@ -32,6 +32,11 @@ def cli_args(ap: Optional[argparse.ArgumentParser] = None, *,
         ap.add_argument("--localities", type=int, default=1,
                         help="total process count for the multi-locality "
                              "runtime (1 = in-process)")
+        ap.add_argument("--spmd", action="store_true",
+                        help="multi-host SPMD mode over jax.distributed "
+                             "(needs --localities > 1): every process "
+                             "trains in lockstep and checkpoints only "
+                             "its addressable shards (DESIGN.md §10)")
     if seq is not None:
         ap.add_argument("--seq", type=int, default=seq)
     if batch is not None:
@@ -46,7 +51,7 @@ def plan_from_args(args, **overrides) -> Plan:
     (e.g. a full ``strategy=Strategy(...)``) win over parsed flags."""
     fields = {name: getattr(args, name)
               for name in ("arch", "tiny", "data", "model", "batch", "seq",
-                           "seed", "localities")
+                           "seed", "localities", "spmd")
               if hasattr(args, name)}
     if hasattr(args, "ckpt"):       # --ckpt -> Plan.ckpt_dir, so worker
         fields["ckpt_dir"] = args.ckpt   # localities get it at spawn

@@ -75,6 +75,16 @@ class Plan:
             nodes (prefetch builds, serve wave prep, checkpoint shard
             writes) are placed on them by lane + data affinity.  Device
             dispatch stays on the driver either way.
+        spmd: multi-host SPMD mode (DESIGN.md §10; needs
+            ``localities > 1``).  ``compile()`` stands up
+            ``jax.distributed`` across all localities (the driver picks
+            a loopback coordinator and is process 0), every process
+            computes the train loop in deterministic lockstep on its
+            local mesh, and checkpoints switch to addressable-shard
+            serialization: each process writes only the blocks of the
+            global persistence view it addresses - zero checkpoint leaf
+            bytes cross the messaging layer.  Only ``session.train``
+            supports this mode.
         ckpt_dir: checkpoint directory for ``session.train`` ("" leaves
             it to the ``ckpt_dir=`` argument).  All localities write
             their own shards into this one directory (DESIGN.md §10),
@@ -96,6 +106,7 @@ class Plan:
     shape: Optional[str] = None          # named SHAPES cell (dryrun)
     remat: bool = False
     localities: int = 1                  # processes incl. the driver
+    spmd: bool = False                   # jax.distributed SPMD mode (§10)
     ckpt_dir: str = ""                   # shared checkpoint dir (§10)
     overrides: dict = dataclasses.field(default_factory=dict)
 
@@ -159,33 +170,100 @@ class Session:
     def __init__(self, plan: Plan, *, max_workers: int = 4):
         self.plan = plan
         self.cfg = plan.config()
-        self.mesh = plan.build_mesh()
         self.strategy = plan.build_strategy()
         self.runtime = FuturizedGraph(max_workers=max_workers,
                                       name=f"session:{plan.arch}")
         self.distributed = None
+        if plan.spmd and plan.localities < 2:
+            raise ValueError("Plan(spmd=True) needs localities >= 2: "
+                             "SPMD mode is the multi-process path")
         if plan.localities > 1:
             from ..distrib import DistributedGraph
             # workers get the checkpoint dir at spawn (PHYRAX_CKPT_DIR):
             # each locality pre-creates it and writes its own shards
             # there (DESIGN.md §10)
             env = {"PHYRAX_CKPT_DIR": plan.ckpt_dir} if plan.ckpt_dir \
-                else None
+                else {}
+            init_thread = None
+            if plan.spmd:
+                env, init_thread = self._start_jax_distributed(env)
             self.distributed = DistributedGraph(
                 localities=plan.localities, graph=self.runtime,
-                worker_env=env, name=f"session:{plan.arch}")
+                worker_env=env or None, name=f"session:{plan.arch}")
+            if init_thread is not None:
+                init_thread.join(timeout=120.0)
+                if init_thread.is_alive():
+                    raise TimeoutError(
+                        "jax.distributed.initialize did not complete "
+                        "on the driver")
+                if self._spmd_init_error:
+                    raise self._spmd_init_error[0]
+        # the mesh is built AFTER jax.distributed init (SPMD mode must
+        # see the multi-process world to pick local devices)
+        self.mesh = plan.build_mesh()
         self._train_step = None
         self._serve_steps: dict[tuple, tuple] = {}
         self._closed = False
 
+    def _start_jax_distributed(self, env: dict):
+        """SPMD bring-up: pick a loopback coordinator, export it to the
+        workers' spawn environment, and start the driver's own
+        ``jax.distributed.initialize`` (process 0) on a thread - it
+        blocks until every process joins, and the workers are only
+        spawned by the ``DistributedGraph`` constructed next."""
+        import threading
+
+        from ..launch.mesh import free_port, maybe_init_jax_distributed
+        coord = f"127.0.0.1:{free_port()}"
+        # the coordinator reaches the WORKERS via their spawn env and
+        # the driver via explicit arguments: this process's os.environ
+        # stays untouched, so a later non-SPMD Session in the same
+        # interpreter cannot inherit a stale coordinator
+        env = dict(env)
+        env["PHYRAX_JAX_COORDINATOR"] = coord
+        env["PHYRAX_JAX_NUM_PROCESSES"] = str(self.plan.localities)
+        self._spmd_init_error: list = []
+
+        def init():
+            try:
+                maybe_init_jax_distributed(
+                    process_id=0, num_processes=self.plan.localities,
+                    coordinator=coord)
+            except BaseException as e:  # noqa: BLE001 - re-raised above
+                self._spmd_init_error.append(e)
+
+        t = threading.Thread(target=init, daemon=True,
+                             name="jax-distributed-init")
+        t.start()
+        return env, t
+
     # -- lifecycle ----------------------------------------------------------
     def close(self):
         """Run the shutdown barrier: drain distributed tasks, stop worker
-        localities, then drain and stop the local runtime.  Idempotent."""
+        localities, then drain and stop the local runtime.  In SPMD mode
+        the driver also joins the ``jax.distributed`` shutdown barrier
+        concurrently with telling the workers to exit - every process
+        must arrive at that barrier or teardown turns fatal.
+        Idempotent."""
         if not self._closed:
             self._closed = True
             if self.distributed is not None:
+                jd_thread = None
+                if self.plan.spmd:
+                    import threading
+
+                    def _jd_shutdown():
+                        try:
+                            jax.distributed.shutdown()
+                        except Exception:  # noqa: BLE001 - best effort
+                            pass
+                    jd_thread = threading.Thread(
+                        target=_jd_shutdown, daemon=True,
+                        name="jax-distributed-shutdown")
+                    jd_thread.start()
                 self.distributed.shutdown(wait=True)
+                if jd_thread is not None:
+                    jd_thread.join(timeout=60.0)
             self.runtime.shutdown(wait=True)
 
     def __enter__(self) -> "Session":
@@ -287,6 +365,18 @@ class Session:
             RuntimeError: the injected failure of ``fail_at_step``.
         """
         plan, runtime, step = self.plan, self.runtime, self.train_step
+        spmd_mode = plan.spmd and self.distributed is not None
+        if spmd_mode and resilience != "none":
+            raise ValueError("resilience modes are not mirrored by the "
+                             "SPMD shadow loop; use resilience='none' "
+                             "with Plan(spmd=True)")
+        if spmd_mode and kill_locality_at_step is not None:
+            raise ValueError(
+                "kill_locality_at_step is a multi-locality drill: a "
+                "jax.distributed world does not survive losing a "
+                "process (coordination-service teardown is collective). "
+                "Drill SPMD host loss with fail_at_step + a --resume "
+                "run on a different process count instead")
         if ckpt_dir is None:
             ckpt_dir = plan.ckpt_dir
         if stream is None:
@@ -307,8 +397,17 @@ class Session:
                 if verbose:
                     print(f"[train] resumed from step {start}")
 
+        if spmd_mode:
+            # every worker process mirrors this loop in lockstep and
+            # writes its own addressable checkpoint shards (DESIGN.md
+            # §10); batches build locally on each process, so nothing
+            # here is deferred to workers
+            self.distributed.spmd_train({
+                "plan": plan, "steps": steps, "ckpt_every": ckpt_every,
+                "ckpt_dir": ckpt_dir, "resume": resume, "stream": stream})
         prefetch = Prefetcher(stream, step.batch_shardings, graph=runtime,
-                              dgraph=self.distributed)
+                              dgraph=None if spmd_mode
+                              else self.distributed)
         runner = (ResilientRunner(step.fn_nodonate)
                   if resilience in ("replay", "replicate") else None)
         inflight = Pipeline(depth=2)
@@ -387,6 +486,17 @@ class Session:
                 ckpt.close()
             runtime.barrier()
 
+        if spmd_mode:
+            # the shadows have posted every entry this run's saves needed
+            # (ckpt.close() waited on the commits); now surface a shadow
+            # that FAILED - its checkpoints were silently aborted
+            done = self.distributed.wait_spmd_done(timeout=600.0)
+            failed = [m for m in done.values() if not m.get("ok")]
+            if failed:
+                raise RuntimeError(
+                    f"SPMD shadow train loop failed on locality "
+                    f"{failed[0]['rank']}: {failed[0].get('error')}")
+
         losses = [f.result() for f in log_futs]
         st = runtime.stats()
         stats_json = st.to_json()
@@ -417,7 +527,13 @@ class Session:
                       f"{dstats['dispatched']} respawned "
                       f"{dstats['respawned']} wire "
                       f"{dstats['bytes_sent']}B out / "
-                      f"{dstats['bytes_recv']}B in")
+                      f"{dstats['bytes_recv']}B in "
+                      f"ckpt-leaf-wire {dstats['ckpt_leaf_wire_bytes']}B")
+            if ckpt is not None and ckpt.aborted_saves:
+                print(f"[train] WARNING: {ckpt.aborted_saves} SPMD "
+                      f"save(s) aborted with a lost writer; the last "
+                      f"committed checkpoint is step "
+                      f"{ckpt.latest_step()}")
         return {"final_loss": final, "losses": losses,
                 "params": params, "step": steps,
                 "runtime_stats": stats_json}

@@ -1,0 +1,105 @@
+"""The SPMD shadow train loop: what a worker locality runs under
+``Plan(spmd=True)`` (DESIGN.md §10).
+
+The CPU backend cannot execute one jit across processes, so the
+multi-host mode keeps every process's *compute* local and bit-identical
+instead: each process builds the same config / local mesh / step
+functions / synthetic stream from the same ``Plan`` and steps them in
+lockstep - deterministic init (same seed), deterministic batches (keyed
+by step index), deterministic CPU kernels - which is exactly the state
+evolution a true SPMD program would give each host for its replicated
+parameters.  What IS distributed is persistence: at every save point
+this loop serializes only the addressable shards of its global
+persistence view (``checkpoint.spmd.write_spmd_shard``) into the shared
+checkpoint directory, and posts the driver just the manifest *entry*
+(offsets, checksums - metadata).  No leaf bytes cross the messaging
+layer in either direction.
+
+The loop is started by a ``spmd_train`` active message
+(``DistributedGraph.spmd_train`` -> ``Locality._on_spmd_train``) and
+reports completion through a ``spmd_done`` post.
+
+Lockstep invariants this loop mirrors from ``Session.train`` - drift
+here would corrupt checkpoints (segments from different logical steps):
+  * params/opt come from ``step.init(PRNGKey(plan.seed))``;
+  * batch ``it`` is ``stream.batch_at(it)`` placed against the step's
+    batch shardings;
+  * the state advances ONLY through ``step.fn``;
+  * saves happen when ``(it + 1) % ckpt_every == 0``, plus a final save
+    when ``steps % ckpt_every != 0``, always after the step retired
+    (``block_until_ready``);
+  * a resume restores the same latest checkpoint the driver restores
+    (shared directory, committed manifests only).
+"""
+from __future__ import annotations
+
+import os
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+
+from ..checkpoint import spmd as ckspmd
+from ..checkpoint.checkpoint import CheckpointManager
+from ..core import steps as steps_lib
+from ..data.pipeline import stream_for
+
+__all__ = ["shadow_train"]
+
+
+def shadow_train(spec: dict, endpoint: Optional[Any] = None) -> int:
+    """Mirror ``Session.train``'s device computation on this process and
+    write this process's checkpoint shards (see module docstring).
+
+    Args:
+        spec: ``{"plan", "steps", "ckpt_every", "ckpt_dir", "resume",
+            "stream"}`` as posted by ``DistributedGraph.spmd_train``.
+        endpoint: this locality's active-message ``Endpoint``; shard
+            manifest entries are posted to the driver through it (None
+            writes shards without reporting - test use).
+    Returns:
+        The final step count.
+    """
+    plan = spec["plan"]
+    steps: int = spec["steps"]
+    ckpt_every: int = spec.get("ckpt_every") or 0
+    ckpt_dir: str = spec.get("ckpt_dir") or ""
+    rank = int(os.environ.get("PHYRAX_LOCALITY_RANK", "0"))
+    cfg = plan.config()
+    mesh = plan.build_mesh()           # local devices (launch.mesh)
+    strategy = plan.build_strategy()
+    step = steps_lib.make_train_step(cfg, mesh, strategy, plan=plan)
+    params, opt = step.init(jax.random.PRNGKey(plan.seed))
+    start = 0
+    if spec.get("resume") and ckpt_dir:
+        with CheckpointManager(ckpt_dir, async_save=False) as cm:
+            if cm.latest_step() is not None:
+                start, (params, opt) = cm.restore(
+                    (params, opt),
+                    shardings=(step.param_shardings, step.opt_shardings))
+    stream = spec.get("stream")
+    if stream is None:
+        stream = stream_for(cfg, batch=plan.batch, seq=plan.seq,
+                            seed=plan.seed)
+    shardings = step.batch_shardings or {}
+
+    def save(s: int, state):
+        tmp = Path(ckpt_dir) / f".tmp_step_{s:08d}"
+        entry = ckspmd.write_spmd_shard(str(tmp), rank, state)
+        if endpoint is not None:
+            endpoint.post(0, "ckpt_entries",
+                          {"step": int(s), "rank": rank, "entry": entry})
+
+    metrics = None
+    for it in range(start, steps):
+        batch = {k: jax.device_put(v, shardings.get(k))
+                 for k, v in stream.batch_at(it).items()}
+        metrics, params, opt = step.fn(params, opt, batch)
+        if ckpt_dir and ckpt_every and (it + 1) % ckpt_every == 0:
+            jax.block_until_ready(metrics)   # save only retired state
+            save(it + 1, (params, opt))
+    if ckpt_dir and ckpt_every and steps % ckpt_every != 0:
+        if metrics is not None:
+            jax.block_until_ready(metrics)
+        save(steps, (params, opt))     # mirrors the driver's final save
+    return steps

@@ -17,6 +17,7 @@ must not stand up a coordination service it never uses.
 from __future__ import annotations
 
 import os
+import socket
 
 import jax
 
@@ -26,15 +27,16 @@ except ImportError:  # jax 0.4.x
     _AxisType = None
 
 
-def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...], *,
+              devices=None):
     if _AxisType is not None:
         try:
-            return jax.make_mesh(shape, axes,
+            return jax.make_mesh(shape, axes, devices=devices,
                                  axis_types=(_AxisType.Auto,) * len(axes))
         except TypeError:  # AxisType exists but make_mesh predates the kwarg
             pass
     if hasattr(jax, "make_mesh"):
-        return jax.make_mesh(shape, axes)
+        return jax.make_mesh(shape, axes, devices=devices)
     from jax.experimental import mesh_utils  # very old jax
     return jax.sharding.Mesh(mesh_utils.create_device_mesh(shape), axes)
 
@@ -47,13 +49,22 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_local_mesh(data: int = 1, model: int = 1, pod: int = 1):
-    """Small mesh over host devices for tests/examples/benchmarks."""
+    """Small mesh over host devices for tests/examples/benchmarks.
+
+    Under ``jax.distributed`` (SPMD mode) the mesh is built from THIS
+    process's ``jax.local_devices()`` only: the CPU backend cannot run
+    multi-process computations, so every process computes on an
+    identical local mesh in lockstep and only *persistence* spans
+    processes (``checkpoint.spmd``, DESIGN.md §10)."""
     shape, axes = [], []
     for n, a in ((pod, "pod"), (data, "data"), (model, "model")):
         if n > 1 or a in ("data", "model"):
             shape.append(n)
             axes.append(a)
-    return make_mesh(tuple(shape), tuple(axes))
+    devices = None
+    if jax.process_count() > 1:
+        devices = jax.local_devices()
+    return make_mesh(tuple(shape), tuple(axes), devices=devices)
 
 
 def mesh_devices(mesh) -> int:
@@ -63,8 +74,21 @@ def mesh_devices(mesh) -> int:
     return n
 
 
+def free_port() -> int:
+    """An ephemeral loopback port for the ``jax.distributed``
+    coordinator of a single-machine SPMD run (the OS-assigned port is
+    released before returning; the race window is acceptable for tests
+    and drills)."""
+    s = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
 def maybe_init_jax_distributed(*, process_id: int | None = None,
-                               num_processes: int | None = None) -> bool:
+                               num_processes: int | None = None,
+                               coordinator: str | None = None) -> bool:
     """Initialize ``jax.distributed`` for a spawned multi-process run.
 
     Reads ``PHYRAX_JAX_COORDINATOR`` (``host:port`` of process 0) plus
@@ -76,6 +100,9 @@ def maybe_init_jax_distributed(*, process_id: int | None = None,
     Args:
         process_id: this process's rank (defaults to the env override).
         num_processes: world size (defaults to the env override).
+        coordinator: ``host:port`` of process 0 (defaults to the env
+            gate; an SPMD ``Session`` passes it explicitly so the
+            driver process's environment is never mutated).
     Returns:
         True if ``jax.distributed.initialize`` was called.
     Raises:
@@ -86,7 +113,7 @@ def maybe_init_jax_distributed(*, process_id: int | None = None,
         RuntimeError: initialization was configured but failed (surfaced
             from jax; a misconfigured coordinator should be loud).
     """
-    coordinator = os.environ.get("PHYRAX_JAX_COORDINATOR")
+    coordinator = coordinator or os.environ.get("PHYRAX_JAX_COORDINATOR")
     if not coordinator:
         return False
     if num_processes is None:

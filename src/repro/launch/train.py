@@ -13,7 +13,12 @@ Fault tolerance drill (used by examples/elastic_restart.py and tests):
     (elastic restart via checkpoint resharding: with --localities N each
     locality writes/reads its own shards, DESIGN.md §10);
   * --resilience replay  wraps the step in HPX-style replay (retry on
-    non-finite results); replicate votes across replicas by checksum.
+    non-finite results); replicate votes across replicas by checksum;
+  * --spmd (with --localities N) runs the multi-host SPMD drill: all N
+    processes join one jax.distributed world, train in lockstep, and
+    each writes only the addressable shards of the global persistence
+    view at every checkpoint (DESIGN.md §10) - a later --resume run with
+    any process count reads them back.
 
 Example:
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --tiny \

@@ -1,0 +1,116 @@
+"""A minimal, deterministic stand-in for ``hypothesis`` so the property
+suite RUNS (never silently skips) even where the real package is not
+installed.  CI installs real hypothesis and gets shrinking + edge-case
+heuristics; this fallback draws a fixed number of seeded random examples
+per test - strictly weaker, but the invariants are still exercised.
+
+Only the strategy surface the suite uses is implemented: ``integers``,
+``lists``, ``tuples``, ``sampled_from``, ``booleans``.  ``@given``
+generates ``max_examples`` (from the loaded settings profile) examples
+with a per-test deterministic seed; a failing example is re-raised with
+the drawn arguments attached to the assertion message.
+"""
+from __future__ import annotations
+
+import functools
+import hashlib
+import random
+from typing import Any, Callable
+
+
+class SearchStrategy:
+    """A strategy is just ``draw(rng) -> value`` here."""
+
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+    def example_for(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> SearchStrategy:
+        return SearchStrategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def booleans() -> SearchStrategy:
+        return SearchStrategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def sampled_from(seq) -> SearchStrategy:
+        seq = list(seq)
+        return SearchStrategy(lambda rng: rng.choice(seq))
+
+    @staticmethod
+    def tuples(*strats: SearchStrategy) -> SearchStrategy:
+        return SearchStrategy(
+            lambda rng: tuple(s.example_for(rng) for s in strats))
+
+    @staticmethod
+    def lists(elements: SearchStrategy, *, min_size: int = 0,
+              max_size: int = 10) -> SearchStrategy:
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.example_for(rng) for _ in range(n)]
+        return SearchStrategy(draw)
+
+
+strategies = _Strategies()
+
+
+class settings:
+    """Profile registry compatible with the subset the suite uses:
+    ``settings.register_profile`` / ``load_profile`` and
+    ``@settings(max_examples=N)`` as a decorator."""
+
+    _profiles: dict[str, dict] = {"default": {"max_examples": 25}}
+    _current: dict = {"max_examples": 25}
+
+    def __init__(self, max_examples: int = None, deadline=None, **_kw):
+        self.overrides = {}
+        if max_examples is not None:
+            self.overrides["max_examples"] = max_examples
+
+    def __call__(self, fn):
+        fn._fallback_settings = self.overrides
+        return fn
+
+    @classmethod
+    def register_profile(cls, name: str, max_examples: int = 25,
+                         deadline=None, **_kw):
+        cls._profiles[name] = {"max_examples": max_examples}
+
+    @classmethod
+    def load_profile(cls, name: str):
+        cls._current = dict(cls._profiles[name])
+
+
+def given(**strats: SearchStrategy):
+    """N-example randomized runner: deterministic per test name, so a
+    failure reproduces on re-run."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def run(*args, **kwargs):
+            n = getattr(run, "_fallback_settings", {}).get(
+                "max_examples", settings._current["max_examples"])
+            seed = int.from_bytes(
+                hashlib.blake2b(fn.__name__.encode(),
+                                digest_size=8).digest(), "big")
+            rng = random.Random(seed)
+            for i in range(n):
+                example = {k: s.example_for(rng) for k, s in strats.items()}
+                try:
+                    fn(*args, **example, **kwargs)
+                except BaseException as e:
+                    raise AssertionError(
+                        f"{fn.__name__} failed on example {i}: "
+                        f"{example!r}") from e
+        # pytest must see a 0-arg signature, not the strategy params
+        # (they would look like missing fixtures)
+        del run.__wrapped__
+        run.hypothesis_fallback = True
+        return run
+
+    return deco

@@ -2,3 +2,36 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))   # tests/_property_fallback
+
+import pytest  # noqa: E402
+
+# Test tiers (split the CI matrix; `-m fast` is the single-process tier):
+#   fast      - everything single-process (the default, applied here)
+#   multiproc - drives 2-3 real worker processes over TCP active messages
+#   spmd      - multi-process jax.distributed drills (subprocess-spawned)
+TIERS = ("fast", "multiproc", "spmd")
+
+# file -> tier for suites whose every test belongs to one tier; files can
+# also mark themselves (tests/test_spmd.py sets `pytestmark`)
+_FILE_TIERS = {"test_distrib.py": "multiproc"}
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "fast: single-process tier-1 tests (default tier)")
+    config.addinivalue_line(
+        "markers",
+        "multiproc: drives 2-3 real worker processes (TCP active messages)")
+    config.addinivalue_line(
+        "markers",
+        "spmd: multi-process jax.distributed drills (subprocess-spawned)")
+
+
+def pytest_collection_modifyitems(config, items):
+    for item in items:
+        tier = _FILE_TIERS.get(os.path.basename(str(item.fspath)))
+        if tier is not None:
+            item.add_marker(getattr(pytest.mark, tier))
+        if not any(item.get_closest_marker(t) for t in TIERS[1:]):
+            item.add_marker(pytest.mark.fast)

@@ -187,6 +187,164 @@ def test_dead_writer_wip_file_pruned_at_commit(tmp_path):
         "manifest.json", "shard_00000.bin"]
 
 
+# -- SPMD format path (single-process units; the 2-process drills live
+# -- in tests/test_spmd.py) ---------------------------------------------------
+
+def test_spmd_collect_segments_single_process_is_whole_leaf():
+    """With one addressable process the persistence view is fully
+    addressable: every leaf yields exactly one whole-leaf (unsliced)
+    segment - the SPMD path degenerates to the classic layout."""
+    from repro.checkpoint import spmd as ckspmd
+
+    t = _tree(20)
+    indices, slices, arrays = ckspmd.collect_segments(t)
+    assert indices == [0, 1, 2]
+    assert slices == [None, None, None]
+    for a, b in zip(arrays, [np.asarray(x) for x in jax.tree.leaves(t)]):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_spmd_write_shard_roundtrips_through_restore(tmp_path):
+    """write_spmd_shard -> driver-style manifest commit -> plain
+    CheckpointManager.restore: the SPMD writer and the classic reader
+    agree on the bytes."""
+    from repro.checkpoint import spmd as ckspmd
+
+    t = _tree(21)
+    leaves, treedef = jax.tree.flatten(t)
+    tmp = tmp_path / ".tmp_step_00000005"
+    entry = ckspmd.write_spmd_shard(str(tmp), 0, t)
+    ckfmt.commit_manifest(
+        tmp, tmp_path / "step_00000005",
+        ckfmt.build_manifest(step=5, treedef=str(treedef),
+                             n_leaves=len(leaves), shards=[entry]))
+    cm = CheckpointManager(tmp_path, async_save=False)
+    step, back = cm.restore(t)
+    assert step == 5
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sliced_two_host_checkpoint_restores_via_manager(tmp_path):
+    """A checkpoint laid out the way two SPMD hosts write it - each leaf
+    split row-wise across two shard files as sliced segments - restores
+    through the ordinary CheckpointManager path (N=2 hosts -> M=1)."""
+    t = {"w": np.arange(32, dtype=np.float32).reshape(8, 4),
+         "b": np.arange(6, dtype=np.int32)}
+    leaves, treedef = jax.tree.flatten(t)
+    tmp = tmp_path / ".tmp_step_00000009"
+    entries = []
+    for host in (0, 1):                      # each host: its half rows
+        idx, sls, arrs = [], [], []
+        for i, leaf in enumerate(leaves):
+            n = leaf.shape[0] // 2
+            lo, hi = host * n, (host + 1) * n
+            idx.append(i)
+            sls.append(([(lo, hi)] + [(0, d) for d in leaf.shape[1:]],
+                        list(leaf.shape)))
+            arrs.append(leaf[lo:hi])
+        entries.append(ckfmt.save_shard(str(tmp), host, idx, arrs,
+                                        slices=sls))
+    ckfmt.commit_manifest(
+        tmp, tmp_path / "step_00000009",
+        ckfmt.build_manifest(step=9, treedef=str(treedef),
+                             n_leaves=len(leaves), shards=entries))
+    cm = CheckpointManager(tmp_path, async_save=False)
+    step, back = cm.restore(t)
+    assert step == 9
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# -- fault injection: every corruption names its culprit, never a torn
+# -- restore ------------------------------------------------------------------
+
+def test_truncated_shard_file_mid_leaf_names_shard_and_leaf(tmp_path):
+    """A shard file cut off mid-leaf (disk full / writer died post-
+    rename corruption) must raise naming the shard and the leaf it
+    tore, not hand back a short array."""
+    cm = CheckpointManager(tmp_path, async_save=False)
+    t = _tree(10)
+    path = cm.save(3, t)
+    f = next(path.glob("shard_*.bin"))
+    m = json.loads((path / "manifest.json").read_text())
+    last = m["shards"][0]["leaves"][-1]
+    import os
+    os.truncate(f, last["offset"] + last["nbytes"] // 2)  # cut last leaf
+    with pytest.raises(CheckpointCorruptError,
+                       match=rf"truncated at leaf {last['index']}"):
+        cm.restore(t)
+
+
+def test_corrupted_manifest_json_is_corruption_not_a_crash(tmp_path):
+    cm = CheckpointManager(tmp_path, async_save=False)
+    path = cm.save(2, _tree(11))
+    (path / "manifest.json").write_text('{"format": "phyrax-ckpt/3", ')
+    with pytest.raises(CheckpointCorruptError, match="does not parse"):
+        cm.restore(_tree(11))
+
+
+def test_unknown_format_version_refused(tmp_path):
+    cm = CheckpointManager(tmp_path, async_save=False)
+    path = cm.save(2, _tree(12))
+    m = json.loads((path / "manifest.json").read_text())
+    m["format"] = "phyrax-ckpt/99"
+    (path / "manifest.json").write_text(json.dumps(m))
+    with pytest.raises(CheckpointCorruptError, match="phyrax-ckpt/99"):
+        cm.restore(_tree(12))
+
+
+def test_unreferenced_stale_shard_pruned_at_commit(tmp_path):
+    """A stale shard from an aborted attempt with a DIFFERENT world size
+    (so the name collides with nothing this save writes) must not be
+    committed: commit prunes everything the manifest does not
+    reference."""
+    t = _tree(13)
+    leaves, treedef = jax.tree.flatten(t)
+    host = [np.asarray(x) for x in leaves]
+    tmp = tmp_path / ".tmp_step_00000006"
+    entry = ckfmt.save_shard(str(tmp), 0, range(len(host)), host)
+    (tmp / "shard_00007.bin").write_bytes(b"stale shard, bigger world")
+    (tmp / "shard_00000.bin.wip-12345").write_bytes(b"dead writer")
+    final = ckfmt.commit_manifest(
+        tmp, tmp_path / "step_00000006",
+        ckfmt.build_manifest(step=6, treedef=str(treedef),
+                             n_leaves=len(host), shards=[entry]))
+    assert sorted(p.name for p in final.iterdir()) == [
+        "manifest.json", "shard_00000.bin"]
+
+
+def test_missing_device_shard_segment_names_the_leaf(tmp_path):
+    """An SPMD checkpoint whose manifest references a leaf whose
+    segments do not cover it (a host's shard file lost after commit,
+    manifest hand-edited, ...) must fail the assembly naming the leaf."""
+    leaf = np.arange(24, dtype=np.float32).reshape(6, 4)
+    e0 = ckfmt.save_shard(str(tmp_path), 0, [0], [leaf[:3]],
+                          slices=[([(0, 3), (0, 4)], [6, 4])])
+    segs = ckfmt.read_shard_segments(str(tmp_path), e0)
+    with pytest.raises(CheckpointCorruptError,
+                       match="leaf 0.*segments cover 12 of 24"):
+        ckfmt.assemble_leaf(0, segs)
+
+
+def test_overlapping_segments_are_corruption_not_garbage():
+    """Overlapping device-shard segments could satisfy a naive element
+    COUNT while leaving part of the leaf uninitialized; they must be
+    rejected, never silently assembled."""
+    leaf = np.arange(4, dtype=np.float32)
+    seg = {"index": 0, "slice": [[0, 2]], "global_shape": [4],
+           "array": leaf[:2]}
+    with pytest.raises(CheckpointCorruptError, match="overlap"):
+        ckfmt.assemble_leaf(0, [seg, dict(seg)])
+
+
+def test_whole_leaf_duplicated_across_shards_is_corruption():
+    seg = {"index": 0, "slice": None, "global_shape": None,
+           "array": np.ones(3)}
+    with pytest.raises(CheckpointCorruptError, match="duplicated"):
+        ckfmt.assemble_leaf(0, [seg, dict(seg)])
+
+
 def test_failed_save_commits_nothing(tmp_path):
     """Atomic failure: a save whose dependency poisons never commits a
     manifest - the step directory must not exist, latest stays None."""

@@ -290,6 +290,29 @@ def test_distributed_save_shards_written_by_owners(cluster, tmp_path):
     assert cm.meta["who"] == "owners"
 
 
+def test_host_copy_save_accounts_ckpt_leaf_wire_bytes(cluster, tmp_path):
+    """Host-copy mode ships each worker-owned shard its leaf bytes in
+    the spawn payload; the ``ckpt_leaf_wire_bytes`` counter must record
+    exactly those bytes (the SPMD drill asserts the same counter stays
+    0 - see tests/test_spmd.py)."""
+    import jax
+
+    from repro.checkpoint.format import assign_shards
+
+    cm = CheckpointManager(tmp_path, graph=cluster.graph, dgraph=cluster)
+    before = cluster.stats()["ckpt_leaf_wire_bytes"]
+    t = _ckpt_tree(9)
+    host = [np.asarray(x) for x in jax.tree.leaves(t)]
+    expected = sum(host[i].nbytes
+                   for _sid, rank, idx in assign_shards(len(host), [0, 1, 2])
+                   for i in idx if rank != 0)
+    assert expected > 0
+    cm.save(2, t)
+    cm.wait()
+    after = cluster.stats()["ckpt_leaf_wire_bytes"]
+    assert after - before == expected
+
+
 def test_corrupt_shard_error_crosses_the_wire(cluster, tmp_path):
     """CheckpointCorruptError raised inside a worker's read_shard task
     re-raises at the driver and names the bad shard."""
