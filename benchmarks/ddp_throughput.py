@@ -1,0 +1,104 @@
+"""DDP throughput: steps/s and gradient wire bytes, 1 vs 2 localities,
+fp32 vs onebit (DESIGN.md §11).
+
+Each cell is one ``warmup + timed``-step run; an ``on_step`` hook
+timestamps every step on the driver, the first ``warmup`` deltas
+(compile, ring warm-up) are discarded, and the cell reports the MEDIAN
+steady-state step time - robust to scheduler noise, no subtraction of
+separately-launched runs needed.
+
+The wire numbers are not estimates: ``grad_wire_bytes`` is the driver's
+exact payload-byte counter and is re-asserted here against
+``steps * (localities - 1) * codec_bytes`` - the benchmark doubles as
+the accounting check outside pytest.
+
+Writes the versioned ``BENCH_ddp_throughput.json`` (repo root; commit
+it when regenerating on a reference machine):
+
+  PYTHONPATH=src python -m benchmarks.ddp_throughput            # full
+  PYTHONPATH=src python -m benchmarks.ddp_throughput --smoke    # CI
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+from repro.frontend.plan import Plan
+
+VERSION = 1
+CELLS = [(1, "fp32"), (1, "onebit"), (2, "fp32"), (2, "onebit")]
+
+
+def run_cell(localities: int, codec: str, *, warmup: int, timed: int,
+             batch: int = 4, seq: int = 16) -> dict:
+    plan = Plan(arch="qwen2.5-3b", tiny=True, batch=batch, seq=seq,
+                ddp=True, ddp_shards=2, grad_codec=codec,
+                localities=localities, seed=0)
+
+    class Stamps:
+        times: list = []
+
+        def on_step(self, it, metrics):
+            Stamps.times.append(time.perf_counter())
+
+    with plan.compile() as session:
+        out = session.train(steps=warmup + timed, hooks=Stamps(),
+                            log_every=warmup + timed, verbose=False)
+    deltas = sorted(b - a for a, b in zip(Stamps.times[warmup:],
+                                          Stamps.times[warmup + 1:]))
+    dt = max(deltas[len(deltas) // 2], 1e-6)          # median, steady state
+    per_step = (localities - 1) * out["codec_bytes"]
+    expect = (warmup + timed) * per_step
+    if out["grad_wire_bytes"] != expect:
+        raise AssertionError(
+            f"wire accounting broke: counted {out['grad_wire_bytes']}B, "
+            f"expected {expect}B")
+    return {"localities": localities, "codec": codec,
+            "steps_per_s": round(1.0 / dt, 3),
+            "step_ms": round(1e3 * dt, 3),
+            "codec_bytes_per_exchange": out["codec_bytes"],
+            "wire_bytes_per_step": per_step,
+            "grad_wire_bytes": out["grad_wire_bytes"],
+            "final_loss": round(float(out["final_loss"]), 6)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--warmup", type=int, default=5)
+    ap.add_argument("--timed", type=int, default=20)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI sizes (2 warmup / 6 timed steps)")
+    ap.add_argument("--out", default=str(Path(__file__).resolve()
+                                         .parent.parent
+                                         / "BENCH_ddp_throughput.json"))
+    args = ap.parse_args()
+    warmup, timed = (2, 6) if args.smoke else (args.warmup, args.timed)
+    results = []
+    print(f"{'W':>2s} {'codec':>7s} {'steps/s':>9s} {'ms/step':>9s} "
+          f"{'wire B/step':>12s} {'final loss':>11s}")
+    for localities, codec in CELLS:
+        r = run_cell(localities, codec, warmup=warmup, timed=timed)
+        results.append(r)
+        print(f"{r['localities']:2d} {r['codec']:>7s} "
+              f"{r['steps_per_s']:9.2f} {r['step_ms']:9.2f} "
+              f"{r['wire_bytes_per_step']:12d} {r['final_loss']:11.4f}",
+              flush=True)
+    fp32 = next(r for r in results if r["localities"] == 2
+                and r["codec"] == "fp32")
+    onebit = next(r for r in results if r["localities"] == 2
+                  and r["codec"] == "onebit")
+    ratio = onebit["wire_bytes_per_step"] / fp32["wire_bytes_per_step"]
+    print(f"onebit wire = 1/{1 / ratio:.1f} of fp32")
+    doc = {"bench": "ddp_throughput", "version": VERSION,
+           "arch": "qwen2.5-3b", "tiny": True, "batch": 4, "seq": 16,
+           "ddp_shards": 2, "warmup_steps": warmup, "timed_steps": timed,
+           "smoke": bool(args.smoke), "onebit_wire_ratio": round(ratio, 5),
+           "results": results}
+    Path(args.out).write_text(json.dumps(doc, indent=2) + "\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,8 +12,16 @@ on N-1 worker processes (the multi-locality runtime, DESIGN.md §9) -
 the loss trajectory is identical because distribution changes where
 host work runs, never what it computes.
 
+``--ddp`` switches to *fabric DDP* (DESIGN.md §11): every locality
+trains its own batch shards and gradients are summed by a ring
+all-reduce of active messages - with ``--grad-codec onebit`` the wire
+carries 1-bit signs + error feedback (~1/31 of the fp32 bytes); the
+report's ``grad-wire`` line prints the exact payload count.
+
     PYTHONPATH=src python examples/train_lm_ddp.py [--steps 200]
     PYTHONPATH=src python examples/train_lm_ddp.py --localities 2
+    PYTHONPATH=src python examples/train_lm_ddp.py --ddp --localities 2 \
+        --grad-codec onebit
 """
 import os
 
@@ -32,7 +40,21 @@ def main(argv=None):
     ap.add_argument("--arch", default="qwen2.5-3b")
     ap.add_argument("--ckpt", default="/tmp/phyrax_ddp_ckpt")
     ap.add_argument("--localities", type=int, default=1)
+    ap.add_argument("--ddp", action="store_true")
+    ap.add_argument("--grad-codec", dest="grad_codec", default="onebit",
+                    choices=["fp32", "onebit"])
     args, _ = ap.parse_known_args(argv)
+
+    if args.ddp:                      # fabric DDP (DESIGN.md §11)
+        plan = Plan(arch=args.arch, tiny=True, batch=16, seq=64, ddp=True,
+                    localities=max(args.localities, 2),
+                    grad_codec=args.grad_codec)
+        with plan.compile() as session:
+            out = session.train(steps=args.steps, log_every=10)
+        print(f"fabric DDP ({args.grad_codec}) finished: final loss "
+              f"{out['final_loss']:.4f}, gradient wire "
+              f"{out['grad_wire_bytes']}B")
+        return
 
     every = max(5, args.steps // 5)   # checkpoints exist before the failure
     plan = Plan(arch=args.arch, tiny=True, data=4, model=2,

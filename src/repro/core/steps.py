@@ -327,6 +327,112 @@ def make_train_step(cfg=None, mesh=None, strategy: Optional[Strategy] = None,
                      scatter_mask=scatter_mask)
 
 
+# ---------------------------------------------------------------------------
+# DDP step (multi-process data parallelism over the active-message fabric)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class DDPStep:
+    """Split train step for fabric DDP (DESIGN.md §11).
+
+    Unlike :class:`TrainStep` - one jit that exchanges gradients with
+    XLA collectives inside ``shard_map`` - DDP over the active-message
+    wire needs the exchange OUTSIDE jax: ``grad_fn`` produces the local
+    loss plus fused f32 gradient buckets (``grad_plan``), the ring
+    all-reduce sums them across localities, and ``apply_fn`` applies the
+    identical optimizer update to the summed-and-averaged buckets.  Both
+    halves are deterministic pure functions of their inputs, which is
+    what makes every locality's post-step params bitwise equal.
+    """
+
+    grad_fn: Any                 # jitted (params, batch) -> (loss, [bufs])
+    apply_fn: Any                # jitted ([bufs], params, opt) -> (gnorm, params, opt)
+    model: Any = None
+    specs: Any = None            # ParamSpec tree
+    param_shardings: Any = None
+    opt_shardings: Any = None
+    batch_shardings: Any = None
+    grad_plan: Any = None        # FusionPlan for the wire buckets
+    strategy: Any = None
+    mesh: Any = None
+
+    def init(self, key):
+        """Deterministic (params, opt) - identical on every locality fed
+        the same key."""
+        params = init_params(self.specs, key)
+        params = jax.device_put(params, self.param_shardings)
+        opt = jax.device_put(optim.init(params, self.strategy.opt),
+                             self.opt_shardings)
+        return params, opt
+
+
+def make_ddp_step(cfg=None, mesh=None, strategy: Optional[Strategy] = None,
+                  shape: Optional[dict] = None, *, plan=None) -> DDPStep:
+    """Build the split grad/apply step pair for fabric DDP.
+
+    ``shape['global_batch']`` here is the PER-SHARD batch (the frontend
+    divides ``Plan.batch`` by the shard count).  Gradient buckets come
+    from ``optim.compression.make_plan`` with ``dp=1`` - the wire codec,
+    not XLA, owns the data-parallel exchange.
+
+    Raises:
+        ValueError: strategy is zero1 (sharded optimizer state cannot
+            ride a replicated-bucket wire), uses grad accumulation, or
+            the mesh has an in-process dp axis (> 1) - fabric DDP IS the
+            data parallelism; combine with model-axis sharding only.
+    """
+    if plan is not None:
+        cfg, mesh, strategy, shape = plan.resolve(
+            "train", cfg=cfg, mesh=mesh, strategy=strategy, shape=shape)
+    if strategy.name == "zero1":
+        raise ValueError("ddp=True cannot use the zero1 strategy: its "
+                         "optimizer state is dp-sharded inside one process, "
+                         "but fabric DDP replicates state per locality")
+    if strategy.grad_accum > 1:
+        raise ValueError("ddp=True with grad_accum > 1 is not supported "
+                         "yet; raise Plan.ddp_shards instead")
+    if dp_degree(mesh) > 1:
+        raise ValueError("ddp=True replaces the in-process dp axes: use a "
+                         "mesh with data=pod=1 (model-axis sharding is fine)")
+    model = build_model(cfg)
+    specs = model.specs()
+    rules = default_rules(sequence_parallel=strategy.sequence_parallel)
+    p_shard = param_shardings(specs, mesh, rules)
+    structs = param_structs(specs)
+    f32_structs = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), structs)
+    from ..optim import compression
+    gplan = compression.make_plan(f32_structs, 1)
+    oc = strategy.opt
+
+    def loss_and_bufs(params, batch):
+        set_act_hook(mesh, rules)
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        return loss.astype(jnp.float32), fusion.pack(grads, gplan)
+
+    b_shard = batch_shardings(cfg, mesh, shape)
+    repl = NamedSharding(mesh, P())
+    bufs_sh = [repl for _ in gplan.buckets]
+    grad_fn = jax.jit(loss_and_bufs,
+                      in_shardings=(p_shard, b_shard),
+                      out_shardings=(repl, bufs_sh))
+
+    def apply(bufs, params, opt_state):
+        set_act_hook(mesh, rules)
+        grads = fusion.unpack(bufs, gplan)
+        params, opt_state, m = optim.update(grads, opt_state, params, oc)
+        return m["grad_norm"], params, opt_state
+
+    f32_specs = optim.init_specs(specs, oc)
+    opt_sh = param_shardings(f32_specs, mesh, rules)
+    apply_fn = jax.jit(apply, donate_argnums=(1, 2),
+                       in_shardings=(bufs_sh, p_shard, opt_sh),
+                       out_shardings=(repl, p_shard, opt_sh))
+    return DDPStep(grad_fn=grad_fn, apply_fn=apply_fn, model=model,
+                   specs=specs, param_shardings=p_shard, opt_shardings=opt_sh,
+                   batch_shardings=b_shard, grad_plan=gplan,
+                   strategy=strategy, mesh=mesh)
+
+
 def _opt_skeleton(oc: OptConfig):
     """PartitionSpec prefix-tree for dense optimizer state (all replicated
     over manual dp axes; 'model' sharding is auto)."""

@@ -4,11 +4,14 @@ layer, ``agas`` the global object directory, ``runtime`` the
 ``Locality``/``DistributedGraph`` scheduler that places tasks by lane +
 data affinity and streams results back as futures resolve."""
 from .agas import ObjectDirectory, RemoteRef  # noqa: F401
+from .collectives import (CODECS, Fp32Codec, GradCodec,  # noqa: F401
+                          OneBitCodec, RingAllReduce, get_codec)
 from .messaging import Endpoint, PeerLostError  # noqa: F401
 from .runtime import (DistributedGraph, Locality,  # noqa: F401
                       LocalityGroup, LocalityLostError, RemoteTaskError,
                       worker_main)
 
-__all__ = ["DistributedGraph", "Endpoint", "Locality", "LocalityGroup",
-           "LocalityLostError", "ObjectDirectory", "PeerLostError",
-           "RemoteRef", "RemoteTaskError", "worker_main"]
+__all__ = ["CODECS", "DistributedGraph", "Endpoint", "Fp32Codec",
+           "GradCodec", "Locality", "LocalityGroup", "LocalityLostError",
+           "ObjectDirectory", "OneBitCodec", "PeerLostError", "RemoteRef",
+           "RemoteTaskError", "RingAllReduce", "get_codec", "worker_main"]

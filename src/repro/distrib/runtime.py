@@ -53,6 +53,7 @@ import jax
 from ..core.futures import FuturizedGraph, Lane, PhyFuture
 from ..core.resilience import tree_checksum
 from .agas import ObjectDirectory, RemoteRef
+from .collectives import RingAllReduce
 from .messaging import Endpoint, PeerLostError
 
 __all__ = ["DistributedGraph", "Locality", "LocalityGroup",
@@ -116,6 +117,13 @@ class Locality:
         ep.register("ping", lambda src, p: p)
         ep.register("stats", self._on_stats)
         ep.register("spmd_train", self._on_spmd_train)
+        # the ring registers its own "grad_ring" handler: it must exist
+        # BEFORE any peer can send (posts to an unregistered action are
+        # dropped silently), so it is born with the locality
+        self.grad_ring = RingAllReduce(ep, world)
+        ep.register("ddp_train", self._on_ddp_train)
+        ep.register("ddp_abort",
+                    lambda src, reason: self.grad_ring.abort(reason))
         ep.on_peer_lost = self._on_peer_lost
 
     # -- handlers ------------------------------------------------------------
@@ -181,6 +189,7 @@ class Locality:
         return out
 
     def _on_peer_lost(self, rank: int):
+        self.grad_ring.peer_lost(rank)   # abort a blocked all-reduce
         if rank == 0:               # driver died: nothing left to serve
             self._stop.set()
 
@@ -204,6 +213,29 @@ class Locality:
                 pass
         threading.Thread(target=run, daemon=True,
                          name=f"spmd-shadow-{self.rank}").start()
+
+    def _on_ddp_train(self, src: int, spec: dict):
+        """Run the fabric-DDP train loop (DESIGN.md §11) on its own
+        thread: this locality computes gradients for its shard block,
+        all-reduces them over the ring, and applies the identical
+        optimizer step.  Completion - and the locality's
+        ``grad_wire_bytes`` - is reported via a ``ddp_done`` post."""
+        def run():
+            try:
+                from ..frontend.ddp import ddp_shadow_train
+                out = ddp_shadow_train(spec, endpoint=self.endpoint,
+                                       ring=self.grad_ring)
+                msg = dict(out, rank=self.rank, ok=True)
+            except BaseException as e:  # noqa: BLE001 - shipped back
+                msg = {"rank": self.rank, "ok": False,
+                       "grad_wire_bytes": int(self.grad_ring.wire_bytes),
+                       "error": f"{type(e).__name__}: {e}"}
+            try:
+                self.endpoint.post(src, "ddp_done", msg)
+            except PeerLostError:
+                pass
+        threading.Thread(target=run, daemon=True,
+                         name=f"ddp-{self.rank}").start()
 
     # -- lifecycle -----------------------------------------------------------
     def serve(self, driver_addr: tuple[str, int]):
@@ -411,6 +443,7 @@ class DistributedGraph:
         self.endpoint.register("task_done", self._on_task_done)
         self.endpoint.register("ckpt_entries", self._on_ckpt_entries)
         self.endpoint.register("spmd_done", self._on_spmd_done)
+        self.endpoint.register("ddp_done", self._on_ddp_done)
         self.endpoint.on_peer_lost = self._on_peer_lost
         self._outstanding: dict[str, _TaskRecord] = {}
         self._by_future: dict[int, _TaskRecord] = {}   # id(promise) -> rec
@@ -422,6 +455,15 @@ class DistributedGraph:
         # checkpoint leaf bytes shipped in save payloads (host-copy
         # mode); the SPMD regression test asserts this stays 0 there
         self.ckpt_leaf_wire_bytes = 0
+        # gradient payload bytes the DRIVER sent over the ring (its own
+        # encodes + relays); the DDP wire test asserts the exact codec
+        # formula against this
+        self.grad_wire_bytes = 0
+        # the driver is ring rank 0; born here for the same
+        # register-before-anyone-sends reason as on the Locality side
+        self.grad_ring = RingAllReduce(self.endpoint, localities,
+                                       account=self.account_grad_wire_bytes)
+        self._ddp_done: dict[int, dict] = {}
         # (step, rank) -> entry promise (save registered first) or the
         # buffered entry value (the worker's post arrived first)
         self._spmd_entries: dict[tuple[int, int], Any] = {}
@@ -669,6 +711,75 @@ class DistributedGraph:
         with self._lock:
             self.ckpt_leaf_wire_bytes += int(n)
 
+    # -- fabric DDP (ring all-reduce; DESIGN.md §11) --------------------------
+    def account_grad_wire_bytes(self, n: int):
+        """Record ``n`` gradient payload bytes the driver's ring sent
+        (own encodes + relays); wired as the driver ring's ``account``
+        callback."""
+        with self._lock:
+            self.grad_wire_bytes += int(n)
+
+    def ddp_train(self, spec: dict):
+        """Start the fabric-DDP train loop (``frontend.ddp``) on every
+        alive worker locality; the driver runs its own shard block
+        in-process via ``Session._train_ddp``.
+
+        Args:
+            spec: picklable dict - ``plan``, ``steps``, ``ckpt_dir``,
+                ``resume``, ``stream``, ``gen`` (the driver ring's
+                generation, so all rings key segments identically).
+        """
+        with self._lock:
+            self._ddp_done.clear()     # completions are per-run
+            self.grad_wire_bytes = 0   # accounting too (re-entrant trains)
+        for rank in self.group.alive_workers():
+            try:
+                self.endpoint.post(rank, "ddp_train", spec)
+            except PeerLostError:      # died since alive_workers(): the
+                pass                   # peer-loss hook aborts the ring
+
+    def ddp_abort(self, reason: str):
+        """Poison the whole ring: locally and (best-effort) on every
+        alive worker.  Survivor localities with no direct connection to
+        a dead rank would otherwise block until timeout."""
+        self.grad_ring.abort(reason)
+        for rank in self.group.alive_workers():
+            try:
+                self.endpoint.post(rank, "ddp_abort", reason)
+            except PeerLostError:
+                pass
+
+    def _on_ddp_done(self, src: int, msg: dict):
+        with self._lock:
+            self._ddp_done[int(msg["rank"])] = msg
+            self._lock.notify_all()
+
+    def wait_ddp_done(self, timeout: float = 600.0) -> dict:
+        """Block until every *alive* worker's DDP loop reported
+        completion (a killed worker is excused - the run already
+        aborted).
+
+        Returns:
+            ``{rank: done message}`` as received, each carrying ``ok``
+            and ``grad_wire_bytes``.
+        Raises:
+            TimeoutError: an alive worker's DDP loop did not finish.
+        """
+        deadline = time.monotonic() + timeout
+
+        def ready():
+            alive = set(self.group.alive_workers())
+            return all(r in self._ddp_done for r in alive)
+
+        with self._lock:
+            ok = self._lock.wait_for(
+                ready, timeout=max(0.0, deadline - time.monotonic()))
+            done = dict(self._ddp_done)
+        if not ok:
+            raise TimeoutError("DDP train loops still running after "
+                               f"{timeout}s")
+        return done
+
     def spmd_train(self, spec: dict):
         """Start the SPMD shadow train loop (``frontend.spmd``) on every
         alive worker locality: each mirrors the driver's device
@@ -806,6 +917,11 @@ class DistributedGraph:
 
     def _on_peer_lost(self, rank: int):
         self.group.note_lost(rank)
+        if self.grad_ring.active:
+            # a DDP exchange is in flight: poison it everywhere - a
+            # survivor with no direct connection to the dead rank never
+            # observes the loss itself
+            self.ddp_abort(f"locality {rank} died mid-all-reduce")
         # SPMD shard entries die with their writer: poison, never re-spawn
         self._poison_spmd_entries(
             rank, f"locality {rank} died before shipping its shard "
@@ -854,7 +970,8 @@ class DistributedGraph:
                     "alive_workers": self.group.alive_workers(),
                     "bytes_sent": self.endpoint.bytes_sent,
                     "bytes_recv": self.endpoint.bytes_recv,
-                    "ckpt_leaf_wire_bytes": self.ckpt_leaf_wire_bytes}
+                    "ckpt_leaf_wire_bytes": self.ckpt_leaf_wire_bytes,
+                    "grad_wire_bytes": self.grad_wire_bytes}
 
     def remote_stats(self, rank: int, timeout: float = 30.0) -> dict:
         """A worker locality's own ``RuntimeStats`` JSON (plus directory

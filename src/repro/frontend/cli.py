@@ -37,6 +37,21 @@ def cli_args(ap: Optional[argparse.ArgumentParser] = None, *,
                              "(needs --localities > 1): every process "
                              "trains in lockstep and checkpoints only "
                              "its addressable shards (DESIGN.md §10)")
+        ap.add_argument("--ddp", action="store_true",
+                        help="data-parallel training over the "
+                             "active-message fabric: each locality "
+                             "trains its own batch shards and gradients "
+                             "are ring-all-reduced (DESIGN.md §11)")
+        ap.add_argument("--grad-codec", dest="grad_codec",
+                        default="fp32", choices=("fp32", "onebit"),
+                        help="DDP gradient wire codec: fp32 (exact) or "
+                             "onebit (1-bit + error feedback, ~1/31 of "
+                             "the bytes)")
+        ap.add_argument("--ddp-shards", dest="ddp_shards", type=int,
+                        default=0,
+                        help="batch shard count for --ddp (0 = one per "
+                             "locality); must divide --batch and be a "
+                             "multiple of --localities")
     if seq is not None:
         ap.add_argument("--seq", type=int, default=seq)
     if batch is not None:
@@ -51,7 +66,8 @@ def plan_from_args(args, **overrides) -> Plan:
     (e.g. a full ``strategy=Strategy(...)``) win over parsed flags."""
     fields = {name: getattr(args, name)
               for name in ("arch", "tiny", "data", "model", "batch", "seq",
-                           "seed", "localities", "spmd")
+                           "seed", "localities", "spmd", "ddp",
+                           "grad_codec", "ddp_shards")
               if hasattr(args, name)}
     if hasattr(args, "ckpt"):       # --ckpt -> Plan.ckpt_dir, so worker
         fields["ckpt_dir"] = args.ckpt   # localities get it at spawn

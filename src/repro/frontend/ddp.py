@@ -1,0 +1,194 @@
+"""Fabric DDP: the per-locality train engine behind ``Plan(ddp=True)``
+(DESIGN.md §11).
+
+Unlike the SPMD shadow loop (``frontend/spmd.py``), which mirrors the
+FULL computation on every process, DDP divides the work: the global
+batch is split into ``Plan.ddp_shards`` row shards, each locality
+computes gradients for its contiguous block of shards, and the partials
+are summed across localities by ``distrib.collectives.RingAllReduce`` -
+active messages on our own TCP fabric, with a pluggable codec (``fp32``
+exact, ``onebit`` 1-bit + error feedback).  Every locality then applies
+the identical optimizer update to the identical averaged gradient, so
+parameters stay replicated without ever being exchanged.
+
+Determinism is the proof obligation (tests/test_ddp.py): batches come
+from the same step-keyed stream on every process
+(``stream.batch_at(it)``, the §10 batch keying), shard slices are pure
+row indexing, and both the within-locality partial accumulation and the
+ring's combine run in fixed shard/rank order - float addition commutes
+but does not associate, so order IS the contract.  With the fp32 codec
+and one shard per locality, a W-locality run is bit-identical in loss
+to a 1-locality run over the same ``ddp_shards``.
+
+The loop is started by a ``ddp_train`` active message
+(``DistributedGraph.ddp_train`` -> ``Locality._on_ddp_train``) and
+reports completion - and its ``grad_wire_bytes`` - through a
+``ddp_done`` post.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from ..checkpoint.checkpoint import CheckpointManager
+from ..core import steps as steps_lib
+from ..data.pipeline import stream_for
+
+__all__ = ["DDPEngine", "ddp_shadow_train", "shard_batch"]
+
+
+def shard_batch(batch: dict, shard: int, n_shards: int) -> dict:
+    """Row shard ``shard`` of ``n_shards`` of a batch dict: contiguous
+    dim-0 slices, so shards 0..n-1 concatenate back to the batch.
+
+    Raises:
+        ValueError: a batch dim is not divisible by ``n_shards``.
+    """
+    out = {}
+    for k, v in batch.items():
+        n = v.shape[0]
+        if n % n_shards:
+            raise ValueError(f"batch field {k!r} has {n} rows, not "
+                             f"divisible into {n_shards} ddp shards")
+        per = n // n_shards
+        out[k] = v[shard * per:(shard + 1) * per]
+    return out
+
+
+class DDPEngine:
+    """One locality's half of a DDP run: local gradients in, globally
+    averaged update out.
+
+    Every locality (driver included - it is ring rank 0) builds one of
+    these from the same ``Plan``, so the step functions, fusion plan,
+    codec, and initial state are identical everywhere.  ``rank`` owns
+    the contiguous shard block ``[rank*S/W, (rank+1)*S/W)`` of the
+    ``S = plan.ddp_shards or world`` batch shards.
+
+    Args:
+        plan: the run's ``Plan`` (``ddp=True``).
+        ring: this locality's ``RingAllReduce`` (configured here).
+        gen: explicit ring generation (the driver's, shipped in the
+            ``ddp_train`` spec); None lets the ring self-increment.
+    Raises:
+        ValueError: shard count not divisible by the world size, batch
+            not divisible by the shard count, or an unsupported
+            strategy (see ``core.steps.make_ddp_step``).
+    """
+
+    def __init__(self, plan, ring, *, gen: Optional[int] = None):
+        self.plan = plan
+        self.ring = ring
+        self.world = ring.world
+        shards = plan.ddp_shards or self.world
+        if shards % self.world:
+            raise ValueError(f"ddp_shards={shards} must be a multiple of "
+                             f"the locality count {self.world}")
+        if plan.batch % shards:
+            raise ValueError(f"batch={plan.batch} must be divisible by "
+                             f"ddp_shards={shards}")
+        self.shards = shards
+        self.step = steps_lib.make_ddp_step(
+            shape={"seq_len": plan.seq, "global_batch": plan.batch // shards,
+                   "kind": "train"},
+            plan=plan)
+        self.codec = ring.configure(plan.grad_codec, self.step.grad_plan,
+                                    gen=gen)
+        #: exact payload bytes ONE locality sends per exchange hop
+        self.codec_bytes = self.codec.wire_bytes(self.step.grad_plan)
+        per = shards // self.world
+        self.owned = range(ring.rank * per, (ring.rank + 1) * per)
+
+    def init(self):
+        """Deterministic (params, opt) from ``Plan.seed`` - identical on
+        every locality."""
+        return self.step.init(jax.random.PRNGKey(self.plan.seed))
+
+    def train_step(self, it: int, batch: dict, params, opt):
+        """One DDP step: owned-shard gradients -> ring all-reduce ->
+        identical optimizer update.
+
+        Args:
+            it: step index (keys the ring exchange).
+            batch: the GLOBAL batch dict for step ``it`` (every
+                locality draws the same one from the step-keyed
+                stream and slices its own shards).
+        Returns:
+            ``(metrics, params, opt)`` with ``metrics["loss"]`` the
+            global mean loss as a host ``np.float32`` and
+            ``metrics["grad_norm"]`` the post-average gradient norm.
+        Raises:
+            LocalityLostError: a peer died mid-all-reduce.
+        """
+        step = self.step
+        part: Optional[list] = None
+        loss = np.float32(0.0)
+        for s in self.owned:                    # fixed shard order
+            sb = {k: jax.device_put(v, step.batch_shardings.get(k))
+                  for k, v in shard_batch(batch, s, self.shards).items()}
+            l, bufs = step.grad_fn(params, sb)
+            bufs = [np.asarray(b) for b in bufs]
+            loss = loss + np.float32(l)
+            part = bufs if part is None else [a + b
+                                              for a, b in zip(part, bufs)]
+        summed, metas = self.ring.allreduce(it, part, meta={"loss": loss})
+        total = np.float32(0.0)
+        for o in range(self.world):             # fixed rank order
+            total = total + np.float32(metas[o]["loss"])
+        ns = np.float32(self.shards)
+        mean = [b / ns for b in summed]
+        gnorm, params, opt = step.apply_fn(mean, params, opt)
+        return ({"loss": total / ns, "grad_norm": gnorm}, params, opt)
+
+
+def ddp_shadow_train(spec: dict, endpoint: Optional[Any] = None,
+                     ring=None) -> dict:
+    """What a worker locality runs for ``Plan(ddp=True)``: the DDP loop
+    over this locality's shard block (see module docstring).
+
+    Checkpoints are driver-only in DDP mode - parameters are replicated,
+    so the driver's save IS the global state; on ``resume`` this loop
+    restores the same latest checkpoint from the shared directory.
+
+    Args:
+        spec: ``{"plan", "steps", "ckpt_dir", "resume", "stream",
+            "gen"}`` as posted by ``DistributedGraph.ddp_train``.
+        endpoint: this locality's active-message ``Endpoint``.
+        ring: the locality's long-lived ``RingAllReduce``; built from
+            ``endpoint`` when None (test use).
+    Returns:
+        dict with ``step``, ``grad_wire_bytes`` (payload bytes this
+        locality sent), and ``final_loss``.
+    """
+    plan = spec["plan"]
+    steps: int = spec["steps"]
+    ckpt_dir: str = spec.get("ckpt_dir") or ""
+    if ring is None:
+        from ..distrib.collectives import RingAllReduce
+        ring = RingAllReduce(endpoint, plan.localities)
+    engine = DDPEngine(plan, ring, gen=spec.get("gen"))
+    params, opt = engine.init()
+    start = 0
+    if spec.get("resume") and ckpt_dir:
+        with CheckpointManager(ckpt_dir, async_save=False) as cm:
+            if cm.latest_step() is not None:
+                start, (params, opt) = cm.restore(
+                    (params, opt),
+                    shardings=(engine.step.param_shardings,
+                               engine.step.opt_shardings))
+    stream = spec.get("stream")
+    if stream is None:
+        stream = stream_for(plan.config(), batch=plan.batch, seq=plan.seq,
+                            seed=plan.seed)
+    metrics = None
+    try:
+        for it in range(start, steps):
+            metrics, params, opt = engine.train_step(
+                it, stream.batch_at(it), params, opt)
+    finally:
+        ring.deactivate()
+    return {"step": steps, "grad_wire_bytes": int(ring.wire_bytes),
+            "final_loss": (float(metrics["loss"])
+                           if metrics is not None else float("nan"))}

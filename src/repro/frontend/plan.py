@@ -85,6 +85,24 @@ class Plan:
             global persistence view it addresses - zero checkpoint leaf
             bytes cross the messaging layer.  Only ``session.train``
             supports this mode.
+        ddp: data-parallel training over the active-message fabric
+            (DESIGN.md §11).  The global batch is split into
+            ``ddp_shards`` row shards; each locality computes gradients
+            for its contiguous shard block, sums them across processes
+            with a ring all-reduce of ``grad_codec``-encoded active
+            messages, and applies the identical optimizer step - so
+            parameters stay replicated without crossing the wire.
+            Exclusive with ``spmd``; only ``session.train`` supports it.
+        grad_codec: wire codec for the DDP gradient exchange: "fp32"
+            (exact - the multi-process run is bit-identical in loss to
+            a 1-locality run over the same shards) or "onebit" (1-bit
+            signs + per-1024-row scales with error feedback, ~1/31 of
+            the fp32 bytes).
+        ddp_shards: batch shard count for ``ddp=True``; 0 means one
+            shard per locality.  Must be a multiple of ``localities``
+            and divide ``batch``; raise it to emulate a bigger world on
+            fewer processes (the loss trajectory depends on the shard
+            count, not the process count).
         ckpt_dir: checkpoint directory for ``session.train`` ("" leaves
             it to the ``ckpt_dir=`` argument).  All localities write
             their own shards into this one directory (DESIGN.md §10),
@@ -107,6 +125,9 @@ class Plan:
     remat: bool = False
     localities: int = 1                  # processes incl. the driver
     spmd: bool = False                   # jax.distributed SPMD mode (§10)
+    ddp: bool = False                    # fabric data parallelism (§11)
+    grad_codec: str = "fp32"             # DDP wire codec: fp32 | onebit
+    ddp_shards: int = 0                  # batch shards (0 = localities)
     ckpt_dir: str = ""                   # shared checkpoint dir (§10)
     overrides: dict = dataclasses.field(default_factory=dict)
 
@@ -177,6 +198,24 @@ class Session:
         if plan.spmd and plan.localities < 2:
             raise ValueError("Plan(spmd=True) needs localities >= 2: "
                              "SPMD mode is the multi-process path")
+        if plan.ddp and plan.spmd:
+            raise ValueError("Plan(ddp=True) and Plan(spmd=True) are "
+                             "exclusive multi-process modes: ddp shards "
+                             "the batch, spmd mirrors it")
+        if plan.ddp:
+            from ..distrib.collectives import CODECS
+            if plan.grad_codec not in CODECS:
+                raise ValueError(f"unknown grad_codec "
+                                 f"{plan.grad_codec!r} (have: "
+                                 f"{sorted(CODECS)})")
+            world = max(plan.localities, 1)
+            shards = plan.ddp_shards or world
+            if shards % world:
+                raise ValueError(f"ddp_shards={shards} must be a "
+                                 f"multiple of localities={world}")
+            if plan.batch % shards:
+                raise ValueError(f"batch={plan.batch} must be divisible "
+                                 f"by ddp_shards={shards}")
         if plan.localities > 1:
             from ..distrib import DistributedGraph
             # workers get the checkpoint dir at spawn (PHYRAX_CKPT_DIR):
@@ -331,6 +370,13 @@ class Session:
         placement and device dispatch stay here, so the loss trajectory
         is identical to the single-process run.
 
+        With ``plan.ddp=True`` the body is the fabric-DDP loop instead
+        (DESIGN.md §11): every locality - the driver included - trains
+        its own shard block of the batch and gradients are summed over
+        the active-message ring; the result dict (and the report's
+        ``grad-wire`` line) gains ``grad_wire_bytes``, the exact
+        gradient payload bytes the driver sent.
+
         Args:
             stream: object with ``batch_at(step) -> dict``; defaults to
                 the architecture's synthetic stream (``stream_for``).
@@ -364,6 +410,13 @@ class Session:
         Raises:
             RuntimeError: the injected failure of ``fail_at_step``.
         """
+        if self.plan.ddp:
+            return self._train_ddp(
+                stream, steps=steps, hooks=hooks, ckpt_dir=ckpt_dir,
+                ckpt_every=ckpt_every, log_every=log_every, resume=resume,
+                fail_at_step=fail_at_step,
+                kill_locality_at_step=kill_locality_at_step,
+                resilience=resilience, verbose=verbose)
         plan, runtime, step = self.plan, self.runtime, self.train_step
         spmd_mode = plan.spmd and self.distributed is not None
         if spmd_mode and resilience != "none":
@@ -536,6 +589,146 @@ class Session:
                       f"{ckpt.latest_step()}")
         return {"final_loss": final, "losses": losses,
                 "params": params, "step": steps,
+                "runtime_stats": stats_json}
+
+    def _train_ddp(self, stream, *, steps, hooks, ckpt_dir, ckpt_every,
+                   log_every, resume, fail_at_step, kill_locality_at_step,
+                   resilience, verbose) -> dict:
+        """The ``Plan(ddp=True)`` body of ``train`` (DESIGN.md §11): the
+        driver is ring rank 0 and trains its own shard block in-process
+        while ``ddp_train`` active messages start the same loop
+        (``frontend.ddp.ddp_shadow_train``) on every worker locality.
+        Checkpoints are driver-only - parameters are replicated, so the
+        driver's save IS the global state; a failure anywhere poisons
+        the ring (``ddp_abort``), so no locality ever hangs."""
+        from ..distrib.collectives import RingAllReduce
+        from .ddp import DDPEngine
+        plan, runtime = self.plan, self.runtime
+        if resilience != "none":
+            raise ValueError("resilience modes do not compose with "
+                             "Plan(ddp=True): the ring's abort-on-loss "
+                             "failure model replaces step replay")
+        if ckpt_dir is None:
+            ckpt_dir = plan.ckpt_dir
+        if stream is None:
+            stream = stream_for(self.cfg, batch=plan.batch, seq=plan.seq,
+                                seed=plan.seed)
+        ring = (self.distributed.grad_ring
+                if self.distributed is not None else RingAllReduce(None, 1))
+        engine = DDPEngine(plan, ring)
+        step = engine.step
+        params, opt = engine.init()
+        start = 0
+        ckpt = (CheckpointManager(ckpt_dir, keep=3, graph=runtime)
+                if ckpt_dir else None)
+        if ckpt is not None and resume:
+            if ckpt.latest_step() is not None:
+                start, (params, opt) = ckpt.restore(
+                    (params, opt),
+                    shardings=(step.param_shardings, step.opt_shardings))
+                if verbose:
+                    print(f"[train] resumed from step {start}")
+        if self.distributed is not None:
+            self.distributed.ddp_train({
+                "plan": plan, "steps": steps, "ckpt_dir": ckpt_dir,
+                "resume": resume, "stream": stream, "gen": ring.gen})
+        # no shardings: the driver slices its own shards from the raw
+        # host batch, exactly as the workers do
+        prefetch = Prefetcher(stream, None, graph=runtime)
+        on_step = getattr(hooks, "on_step", None)
+        on_log = getattr(hooks, "on_log", None)
+        on_ckpt = getattr(hooks, "on_checkpoint", None)
+        losses: list = []
+        t_log = time.time()
+        metrics = None
+        try:
+            for it in range(start, steps):
+                if kill_locality_at_step is not None \
+                        and it == kill_locality_at_step:
+                    killed = self.kill_locality()
+                    if verbose and killed is not None:
+                        print(f"[train] drill: killed locality "
+                              f"{killed} at step {it}", flush=True)
+                batch = prefetch.get(it)
+                if fail_at_step is not None and it == fail_at_step \
+                        and not resume:
+                    raise RuntimeError(
+                        f"injected node failure at step {it}")
+                metrics, params, opt = engine.train_step(
+                    it, batch, params, opt)
+                if on_step is not None:
+                    on_step(it, metrics)
+                if (it + 1) % log_every == 0:
+                    loss = float(metrics["loss"])
+                    losses.append(loss)
+                    dt = (time.time() - t_log) / log_every
+                    if verbose:
+                        print(f"[train] step {it + 1:5d} loss "
+                              f"{loss:8.4f} gnorm "
+                              f"{float(metrics['grad_norm']):8.3f} "
+                              f"{dt * 1e3:8.1f} ms/step", flush=True)
+                    if on_log is not None:
+                        on_log(it, loss)
+                    t_log = time.time()
+                if ckpt is not None and (it + 1) % ckpt_every == 0:
+                    retired = runtime.defer(
+                        jax.block_until_ready, metrics["grad_norm"],
+                        lane=Lane.CHECKPOINT, name=f"retire:{it}")
+                    fut = ckpt.save(it + 1, (params, opt),
+                                    deps=(retired,),
+                                    meta={"arch": plan.arch})
+                    if on_ckpt is not None:
+                        on_ckpt(it + 1, fut)
+            if ckpt is not None and steps % ckpt_every != 0 \
+                    and metrics is not None:
+                ckpt.save(steps, (params, opt), meta={"arch": plan.arch})
+        except BaseException:
+            # poison the ring everywhere: workers blocked in an
+            # all-reduce must abort, not wait out their timeout
+            if self.distributed is not None:
+                self.distributed.ddp_abort("the driver aborted the DDP run")
+            raise
+        finally:
+            prefetch.close()
+            if ckpt is not None:
+                ckpt.close()
+            runtime.barrier()
+            ring.deactivate()
+
+        if self.distributed is not None:
+            done = self.distributed.wait_ddp_done(timeout=600.0)
+            failed = [m for m in done.values() if not m.get("ok")]
+            if failed:
+                raise RuntimeError(
+                    f"DDP train loop failed on locality "
+                    f"{failed[0]['rank']}: {failed[0].get('error')}")
+        st = runtime.stats()
+        stats_json = st.to_json()
+        dstats = (self.distributed.stats()
+                  if self.distributed is not None else None)
+        if dstats is not None:
+            stats_json["distributed"] = dstats
+        gwb = (dstats["grad_wire_bytes"] if dstats is not None
+               else int(ring.wire_bytes))
+        final = (float(metrics["loss"]) if metrics is not None
+                 else float("nan"))
+        if verbose:
+            if metrics is None:
+                print(f"[train] nothing to do: resumed at step {start} "
+                      f">= steps {steps}")
+            else:
+                print(f"[train] done: final loss {final:.4f} "
+                      f"(ddp world {engine.world}, "
+                      f"shards {engine.shards})")
+            print(f"[train] grad-wire {gwb}B ({plan.grad_codec} codec, "
+                  f"{engine.codec_bytes}B/locality/exchange)")
+            if dstats is not None:
+                print(f"[train] localities: wire "
+                      f"{dstats['bytes_sent']}B out / "
+                      f"{dstats['bytes_recv']}B in")
+        return {"final_loss": final, "losses": losses, "params": params,
+                "step": steps if metrics is not None else start,
+                "grad_wire_bytes": gwb, "codec_bytes": engine.codec_bytes,
                 "runtime_stats": stats_json}
 
     # -- serve --------------------------------------------------------------

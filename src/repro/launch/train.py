@@ -20,6 +20,14 @@ Fault tolerance drill (used by examples/elastic_restart.py and tests):
     view at every checkpoint (DESIGN.md §10) - a later --resume run with
     any process count reads them back.
 
+Data parallelism over our own fabric (DESIGN.md §11):
+  * --ddp (with --localities N) splits the batch into --ddp-shards row
+    shards (default: one per locality); every process trains its own
+    block and gradients are summed by a ring all-reduce of active
+    messages - with --grad-codec onebit the wire carries 1-bit signs +
+    error feedback (~1/31 of fp32 bytes), and the exact payload count
+    is printed as the report's `grad-wire` line.
+
 Example:
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --tiny \
       --steps 30 --batch 8 --seq 64 --strategy phylanx --ckpt /tmp/ck

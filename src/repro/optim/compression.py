@@ -38,6 +38,24 @@ def unpack_bits(packed):
     return bits.reshape(packed.shape[0], -1).astype(bool)
 
 
+def pack_signs(signs):
+    """bool [n] (any n, ragged ok) -> uint32 [ceil(n/32)] bitmap.
+
+    The 1-D face of :func:`pack_bits` for wire payloads whose length is
+    not a multiple of 32: pads with zeros, packs little-endian.  Inverse
+    is ``unpack_signs(packed, n)``.
+    """
+    n = signs.shape[0]
+    pad = (-n) % 32
+    flat = jnp.pad(signs.astype(bool), (0, pad))
+    return pack_bits(flat.reshape(1, -1))[0]
+
+
+def unpack_signs(packed, n: int):
+    """uint32 [ceil(n/32)] -> bool [n]; inverse of :func:`pack_signs`."""
+    return unpack_bits(packed.reshape(1, -1))[0, :n]
+
+
 def quantize_bucket(buf, err):
     """1-D bucket (len % ROW*32 == 0) -> (packed, scales, new_err)."""
     q = buf.astype(jnp.float32).reshape(-1, ROW) + err

@@ -258,3 +258,71 @@ def test_zero1_scatter_mask_rules():
     else:
         assert mask16["w"] is True      # 48 % 16 == 0, big, dim0 free
         assert mask16["b"] is False     # too small / indivisible
+
+
+# -- DDP gradient wire (DESIGN.md §11) ----------------------------------------
+
+@given(n=st.integers(1, 300), seed=st.integers(0, 2 ** 16))
+def test_pack_signs_roundtrip_any_length(n, seed):
+    """pack_signs/unpack_signs round-trip at EVERY length, including
+    lengths that are not a multiple of 8 (or 32): zero-padded
+    little-endian uint32 words, exact bit recovery."""
+    from repro.optim import compression
+    rng = np.random.default_rng(seed)
+    bits = rng.random(n) < 0.5
+    packed = compression.pack_signs(jnp.asarray(bits))
+    assert packed.shape == ((n + 31) // 32,)
+    assert packed.dtype == jnp.uint32
+    back = compression.unpack_signs(packed, n)
+    np.testing.assert_array_equal(np.asarray(back), bits)
+
+
+@given(rows=st.integers(1, 4), words=st.integers(1, 3),
+       seed=st.integers(0, 2 ** 16))
+def test_pack_bits_roundtrip_2d(rows, words, seed):
+    """The 2-D [R, C] face used by quantize_bucket: 32 bits per uint32
+    word, row layout preserved."""
+    from repro.optim import compression
+    rng = np.random.default_rng(seed)
+    signs = rng.random((rows, 32 * words)) < 0.5
+    packed = compression.pack_bits(jnp.asarray(signs))
+    assert packed.shape == (rows, words)
+    back = compression.unpack_bits(packed)
+    np.testing.assert_array_equal(np.asarray(back), signs)
+
+
+@given(rows=st.integers(1, 3), seed=st.integers(0, 2 ** 16))
+def test_quantize_bucket_sign_fidelity_and_scale_bounds(rows, seed):
+    """Dequantized values are EXACTLY +/- the per-row L1 scale with the
+    sign of the input, and 0 <= scale = mean|q| <= max|q| per row."""
+    from repro.optim import compression
+    rng = np.random.default_rng(seed)
+    n = rows * compression.ROW
+    g = rng.standard_normal(n).astype(np.float32)
+    err0 = jnp.zeros((rows, compression.ROW), jnp.float32)
+    packed, scale, _ = compression.quantize_bucket(jnp.asarray(g), err0)
+    q = g.reshape(rows, compression.ROW)
+    s = np.asarray(scale)
+    assert (s >= 0).all()
+    assert (s.ravel() <= np.abs(q).max(axis=1) + 1e-6).all()
+    np.testing.assert_allclose(s.ravel(), np.abs(q).mean(axis=1), rtol=1e-5)
+    deq = np.asarray(compression.dequantize_bucket(packed, scale, n))
+    np.testing.assert_array_equal(deq.reshape(rows, -1),
+                                  np.where(q >= 0, s, -s))
+
+
+@given(rows=st.integers(1, 2), seed=st.integers(0, 2 ** 16))
+def test_quantize_bucket_error_feedback_invariant(rows, seed):
+    """EF invariant: dequant(quant(g + e)) + e' == g + e at float
+    tolerance - quantization error is never lost, only delayed."""
+    from repro.optim import compression
+    rng = np.random.default_rng(seed)
+    n = rows * compression.ROW
+    g = rng.standard_normal(n).astype(np.float32)
+    e = (0.5 * rng.standard_normal((rows, compression.ROW))
+         ).astype(np.float32)
+    packed, scale, e2 = compression.quantize_bucket(
+        jnp.asarray(g), jnp.asarray(e))
+    deq = np.asarray(compression.dequantize_bucket(packed, scale, n))
+    np.testing.assert_allclose(deq + np.asarray(e2).ravel(),
+                               g + np.asarray(e).ravel(), atol=1e-5)
