@@ -6,11 +6,8 @@ with shapes + loop multipliers - the 'profile' of the dry-run methodology.
 from repro.launch import dryrun  # noqa: F401  (sets XLA_FLAGS=512 first)
 
 import argparse
-from collections import defaultdict
 
-import jax
-
-from repro.configs import SHAPES, get_config
+from repro.configs import get_config
 from repro.core import hlo_costs, steps as steps_lib
 from repro.launch.mesh import make_production_mesh, mesh_devices
 

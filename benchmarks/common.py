@@ -1,5 +1,4 @@
 """Shared helpers for the benchmark harness."""
-import json
 import os
 import subprocess
 import sys

@@ -94,9 +94,7 @@ def measured(mb: int = 2048):
 
 def modelled(t1: float, mb: int):
     """alpha-beta projection of the paper's 1..128-node experiment."""
-    import jax.numpy as jnp
     from repro.core import fusion
-    from repro.core.sharding import init_params, param_structs
     from repro.models import cnn
     specs = cnn.har_cnn_specs(width=64)
     import jax

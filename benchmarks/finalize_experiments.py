@@ -7,7 +7,6 @@ import io
 import json
 import os
 import re
-import sys
 from contextlib import redirect_stdout
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")

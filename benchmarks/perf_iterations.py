@@ -16,7 +16,6 @@ Each variant is one hypothesis->change->measure iteration; EXPERIMENTS.md
 from repro.launch import dryrun  # noqa: F401  (sets XLA_FLAGS=512 first)
 
 import argparse
-import json
 from pathlib import Path
 
 RUNS = [

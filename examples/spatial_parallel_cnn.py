@@ -13,7 +13,6 @@ import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
 
 import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
@@ -53,7 +52,6 @@ def main():
     tile = 128 // 4
     max_err = 0.0
     for s in range(4):
-        lo_y = s * tile + (0 if s == 0 else 0)
         # tile s's outputs cover global rows [s*tile - halo, ...] except at
         # the edges; compare the overlap with the reference
         for j in range(tile):

@@ -1,0 +1,51 @@
+"""phylint: static execution-tree analysis + runtime concurrency sanitizer.
+
+Two layers (DESIGN.md §12):
+
+* **static** — :mod:`repro.analysis.lint` runs passes (PHY001–PHY006) over
+  a built graph, a ``@futurize`` trace, or the dryrun mirrors in
+  :mod:`repro.analysis.trace_builders`, without executing anything;
+* **dynamic** — :mod:`repro.analysis.sanitize` (armed by
+  ``PHYRAX_SANITIZE=1``) turns hangs and silent protocol violations into
+  named diagnostics (PHY101–PHY105): a wait-for-graph deadlock watchdog,
+  active-message protocol checks, and AGAS pin/deref accounting.
+
+``sanitize`` is imported eagerly (it is stdlib-only and ``core.futures``
+hooks into it at import time); the lint layer imports the core and is
+loaded lazily so ``repro.core.futures -> repro.analysis`` stays acyclic.
+"""
+
+from __future__ import annotations
+
+from . import sanitize
+from .sanitize import DeadlockError, Diagnostic, Sanitizer
+
+_LAZY = {
+    # NOTE: the ``lint`` *function* is deliberately not re-exported here:
+    # ``repro.analysis.lint`` must always name the submodule regardless of
+    # import order (a lazy function attr would shadow it).  Call it as
+    # ``lint.lint(...)`` or import it from the submodule.
+    "Finding": "lint",
+    "LintGraph": "lint",
+    "LintNode": "lint",
+    "STATIC_RULES": "lint",
+    "plan_traces": "trace_builders",
+    "serve_trace": "trace_builders",
+    "step_contract": "trace_builders",
+    "train_trace": "trace_builders",
+}
+
+__all__ = sorted(
+    ["DeadlockError", "Diagnostic", "Sanitizer", "sanitize", *_LAZY]
+)
+
+
+def __getattr__(name: str):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    value = getattr(importlib.import_module(f".{mod}", __name__), name)
+    globals()[name] = value
+    return value

@@ -1,0 +1,213 @@
+"""Dryrun trace builders: the shape of a Plan's execution tree, statically.
+
+`tools/phylint.py` needs the futurized tree of every shipped config
+*without* initializing parameters or touching devices.  These builders
+construct :class:`~repro.analysis.lint.LintGraph`s that mirror — node for
+node, name for name, edge for edge — the trees ``Session.train`` and
+``Session.serve`` build at runtime (single-locality driver view).  A
+fast-tier parity test (`tests/test_analysis.py`) traces a real session and
+asserts the builder output matches, so the mirrors cannot drift silently.
+
+Multi-locality sessions add promise/dispatch node pairs whose placement
+depends on live membership; lint those from a real trace
+(``LintGraph.from_trace``) or a live graph (``LintGraph.from_graph``)
+instead of a static mirror.
+
+``step_contract`` is different in kind: it models the *device-step
+donation contract* (TrainStep donates ``(params, opt)`` via
+``donate_argnums=(0, 1)``, DDPStep's apply via ``(1, 2)`` — DESIGN.md §11)
+as virtual ``device`` nodes with ``uses``/``donates`` annotations, which
+is what the PHY005 donation-after-use pass checks.  The host tree never
+sees these buffers; the contract graph is where that hazard lives.
+"""
+
+from __future__ import annotations
+
+import math
+
+from .lint import LintGraph
+
+#: Host-side prefetch lookahead (data/pipeline.py Prefetcher default).
+PREFETCH_DEPTH = 2
+
+
+def train_trace(
+    plan,
+    *,
+    steps: int = 6,
+    ckpt_every: int = 2,
+    log_every: int = 2,
+    ckpt: bool = True,
+    depth: int = PREFETCH_DEPTH,
+    start: int = 0,
+) -> LintGraph:
+    """The driver-side host tree of ``Session.train`` for this plan.
+
+    Mirrors the standard, SPMD-shadow and fabric-DDP variants of the loop
+    (DDP logs inline, so it has no ``log:`` nodes).  Raises for
+    multi-locality standard training, whose placement-dependent
+    promise/dispatch pairs cannot be mirrored statically.
+    """
+    ddp = bool(getattr(plan, "ddp", False))
+    spmd = bool(getattr(plan, "spmd", False))
+    if getattr(plan, "localities", 1) > 1 and not (ddp or spmd):
+        raise ValueError(
+            "train_trace mirrors the single-locality driver tree; lint a "
+            "multi-locality run via LintGraph.from_trace / from_graph"
+        )
+    g = LintGraph(label=f"train[{getattr(plan, 'arch', '?')}]")
+    scheduled: set[int] = set()
+
+    def schedule(it: int) -> None:
+        # Prefetcher.schedule: batches [it, it+depth) in flight; the final
+        # iteration schedules one lookahead batch nobody consumes, which
+        # prefetch.close() cancels — cancelled, not dead (PHY004 exempt).
+        for s in range(it, it + depth):
+            if s not in scheduled:
+                scheduled.add(s)
+                g.add(
+                    f"prefetch:{s}",
+                    lane="PREFETCH",
+                    forced=s < steps,
+                    cancelled=s >= steps,
+                    src="data/pipeline.py Prefetcher",
+                )
+
+    pending: str | None = None  # previous save's manifest node name
+
+    def save(step: int, retired: str | None) -> None:
+        # CheckpointManager.save: gate -> shard -> manifest, chained on the
+        # previous save by dependency edge (checkpoint/checkpoint.py).  The
+        # chain edge is conservative: the runtime adds it only when the
+        # previous save is still in flight (a finished one is consumed by
+        # _raise_if_failed), so parity checks must normalize it away.
+        nonlocal pending
+        deps = [d for d in (retired, pending) if d is not None]
+        g.add(f"ckpt:gate:{step}", lane="CHECKPOINT", deps=deps, src="checkpoint save")
+        g.add(f"ckpt:shard0:{step}", lane="CHECKPOINT", deps=[f"ckpt:gate:{step}"], src="checkpoint save")
+        pending = f"ckpt:manifest:{step}"
+        g.add(pending, lane="CHECKPOINT", deps=[f"ckpt:shard0:{step}"], src="checkpoint save")
+
+    for it in range(start, steps):
+        schedule(it)
+        if not ddp and (it + 1) % log_every == 0:
+            g.add(f"log:{it}", lane="CHECKPOINT", forced=True, src="Session.train _force_and_log")
+        if ckpt and (it + 1) % ckpt_every == 0:
+            g.add(f"retire:{it}", lane="CHECKPOINT", src="Session.train step retirement")
+            save(it + 1, f"retire:{it}")
+    if ckpt and steps > start and steps % ckpt_every != 0:
+        save(steps, None)  # final snapshot; gated only on the previous save
+    if pending is not None:
+        g.mark_forced(pending)  # ckpt.close() drains the last manifest
+    g.has_forced_info = True
+    return g
+
+
+def serve_trace(
+    plan,
+    *,
+    requests: int = 8,
+    gen_len: int = 16,
+    slots: int = 4,
+) -> LintGraph:
+    """The driver-side tree of ``Session.serve``: one PREFETCH wave-prep
+    node per wave, a ``prefill`` joining the wave batch (plus the previous
+    wave's decode tail as a dispatch-order edge), and ``gen_len`` chained
+    ``decode`` nodes; only the final tail is forced."""
+    if getattr(plan, "localities", 1) > 1:
+        raise ValueError(
+            "serve_trace mirrors the single-locality driver tree; lint a "
+            "multi-locality run via LintGraph.from_trace / from_graph"
+        )
+    g = LintGraph(label=f"serve[{getattr(plan, 'arch', '?')}]")
+    if requests <= 0:
+        g.has_forced_info = True
+        return g
+    waiting = requests
+    take = min(slots, waiting)
+    waiting -= take
+    batch = g.add("wave:0", lane="PREFETCH", src="Session.serve defer_wave")
+    tail: int | None = None
+    done, n_real, w = 0, take, 0
+    while True:
+        nxt: tuple[int, int] | None = None
+        if waiting > 0 and done + n_real < requests:
+            take = min(slots, waiting)
+            waiting -= take
+            nxt = (g.add(f"wave:{w + 1}", lane="PREFETCH", src="Session.serve defer_wave"), take)
+        deps = [batch] if tail is None else [batch, tail]
+        carry = g.add(f"prefill:w{w}", deps=deps, src="Session.serve")
+        for t in range(gen_len):
+            carry = g.add(f"decode:w{w}:t{t}", deps=[carry], src="Session.serve")
+        tail = carry
+        done += n_real
+        if nxt is None:
+            break
+        batch, n_real = nxt
+        w += 1
+    g.mark_forced(tail)  # tail.result(): the whole chain retires through it
+    return g
+
+
+def step_contract(plan, *, steps: int = 4, ckpt_every: int = 2) -> LintGraph:
+    """The device-step donation contract as a lintable buffer-version graph.
+
+    Buffers are versioned ``params@k`` / ``opt@k``: step ``k`` reads and
+    donates version ``k`` and produces version ``k+1``; the synchronous
+    host capture a checkpoint save performs (``np.asarray`` before the
+    next dispatch) reads version ``k+1`` *before* step ``k+1`` donates it.
+    A capture modelled after the donating step is exactly the PHY005
+    hazard the DDPStep contract forbids.
+    """
+    from ..core import steps as steps_lib
+
+    ddp = bool(getattr(plan, "ddp", False))
+    donated = steps_lib.DDPStep.donated_buffers if ddp else steps_lib.TrainStep.donated_buffers
+    g = LintGraph(label=f"step-contract[{getattr(plan, 'arch', '?')}]" + (":ddp" if ddp else ""))
+    for it in range(steps):
+        bufs = tuple(f"{b}@{it}" for b in donated)
+        if ddp:
+            # grad_fn reads params, the ring exchanges buckets, apply
+            # donates (params, opt) — core/steps.py make_ddp_step
+            g.add(f"grad:{it}", kind="device", uses=(f"params@{it}", f"batch@{it}"), src="DDPStep.grad_fn")
+            g.add(f"ring:{it}", kind="device", uses=(f"buckets@{it}",), src="RingAllReduce")
+            g.add(
+                f"apply:{it}",
+                kind="device",
+                uses=bufs + (f"buckets@{it}",),
+                donates=bufs,
+                src="DDPStep.apply_fn donate_argnums=(1, 2)",
+            )
+        else:
+            g.add(
+                f"step:{it}",
+                kind="device",
+                uses=bufs + (f"batch@{it}",),
+                donates=bufs,
+                src="TrainStep.fn donate_argnums=(0, 1)",
+            )
+        if ckpt_every and (it + 1) % ckpt_every == 0:
+            # synchronous host capture of the freshly produced versions
+            g.add(
+                f"capture:{it + 1}",
+                kind="device",
+                uses=tuple(f"{b}@{it + 1}" for b in donated),
+                src="CheckpointManager.save host capture",
+            )
+    return g
+
+
+def plan_traces(plan, *, steps: int = 6, requests: int = 8, gen_len: int = 4, slots: int = 4) -> dict[str, LintGraph]:
+    """Every statically derivable tree for a plan, keyed by workload."""
+    out = {
+        "train": train_trace(plan, steps=steps),
+        "step-contract": step_contract(plan, steps=steps),
+    }
+    if not getattr(plan, "ddp", False) and not getattr(plan, "spmd", False):
+        out["serve"] = serve_trace(plan, requests=requests, gen_len=gen_len, slots=slots)
+    return out
+
+
+def waves_for(requests: int, slots: int) -> int:
+    """Number of serve waves for a request count (helper for tests)."""
+    return math.ceil(requests / slots) if requests > 0 else 0

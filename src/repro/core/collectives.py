@@ -12,9 +12,6 @@ ops from sharding constraints.
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Sequence
-
 import jax
 import jax.numpy as jnp
 from jax import lax

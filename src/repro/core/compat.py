@@ -54,7 +54,7 @@ def layer_scan(f, init, xs, length=None):
         return jax.lax.scan(f, init, xs, length=length)
     carry, ys = init, []
     for i in range(n):
-        xi = None if xs is None else jax.tree.map(lambda a: a[i], xs)
+        xi = None if xs is None else jax.tree.map(lambda a, i=i: a[i], xs)
         carry, y = f(carry, xi)
         ys.append(y)
     if not ys or all(y is None for y in ys):

@@ -19,7 +19,6 @@ auditable.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Any
 
 # TPU v5e model constants (per chip) - same numbers as the roofline.

@@ -25,11 +25,10 @@ SPMD program).
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from collections import defaultdict
 
-from .hlo_analysis import _DT_BYTES, _shape_bytes, _group_size
+from .hlo_analysis import _shape_bytes, _group_size
 
 _COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{\s*$")
 _INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s+=\s+(.*?)\s+([\w\-]+)\(")

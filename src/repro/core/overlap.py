@@ -20,9 +20,6 @@ the collectives here are real lax collectives the scheduler can overlap.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Optional
-
 import jax
 import jax.numpy as jnp
 from jax import lax

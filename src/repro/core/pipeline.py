@@ -16,8 +16,7 @@ validated in tests.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

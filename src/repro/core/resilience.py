@@ -83,14 +83,12 @@ class ResilientRunner:
 
     def replay(self, *args, max_retries: int = 3, **kwargs):
         """HPX task replay: rerun until the result validates."""
-        last = None
         for attempt in range(max_retries + 1):
             out = self._run_once(*args, **kwargs)
             if self.validate(out):
                 return out
             self.stats["replays"] += 1
             self.stats["rejected"] += 1
-            last = out
         raise ResilienceError(
             f"replay failed after {max_retries + 1} attempts")
 

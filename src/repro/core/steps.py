@@ -16,7 +16,6 @@ caches spread over "data" too).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Optional
 
 import jax
@@ -109,7 +108,6 @@ def batch_shardings(cfg, mesh, shape: dict):
     sh = {}
     for k, v in input_specs(cfg, shape).items():
         # shard dim0 (batch) over dp axes when divisible
-        axes = dp_axes(mesh)
         n = dp_degree(mesh)
         use = spec if (v.shape and v.shape[0] % max(n, 1) == 0 and n > 1) else P()
         sh[k] = NamedSharding(mesh, use)
@@ -121,6 +119,9 @@ def batch_shardings(cfg, mesh, shape: dict):
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
 class TrainStep:
+    # buffers fn donates per call (donate_argnums=(0, 1) below); the
+    # phylint step-contract builder lints against this declaration
+    donated_buffers = ("params", "opt")
     fn: Any                      # jitted (params, opt, batch) -> (metrics, params, opt)
     fn_nodonate: Any = None      # for resilience replay/replicate (inputs kept)
     model: Any = None
@@ -344,6 +345,9 @@ class DDPStep:
     what makes every locality's post-step params bitwise equal.
     """
 
+    # buffers apply_fn donates per call (donate_argnums=(1, 2) below);
+    # the phylint step-contract builder lints against this declaration
+    donated_buffers = ("params", "opt")
     grad_fn: Any                 # jitted (params, batch) -> (loss, [bufs])
     apply_fn: Any                # jitted ([bufs], params, opt) -> (gnorm, params, opt)
     model: Any = None
@@ -467,6 +471,9 @@ def decode_rules(cfg, mesh, shape: dict) -> ShardingRules:
 
 @dataclasses.dataclass
 class ServeStep:
+    # decode donates the KV cache in place (donate_argnums=(1,) below);
+    # the phylint step-contract builder lints against this declaration
+    donated_buffers = ("cache",)
     fn: Any
     model: Any
     specs: Any

@@ -154,7 +154,10 @@ class Prefetcher:
 
     def close(self):
         for f in self._futs.values():
-            f.cancel()
+            if not f.cancel():
+                # lookahead batch finished before the cancel landed: observe
+                # it so the node doesn't read as silently dropped (PHY004)
+                f.exception()
         self._futs.clear()
         if self._own_graph:
             self.graph.shutdown(wait=True)

@@ -30,6 +30,7 @@ from typing import Any, Optional
 
 import numpy as np
 
+from ..analysis import sanitize as _san
 from .messaging import Endpoint
 
 __all__ = ["ObjectDirectory", "RemoteRef"]
@@ -86,6 +87,14 @@ class ObjectDirectory:
         self._store: dict[int, Any] = {}
         self._lock = threading.Lock()
         self._counter = itertools.count()
+        # pin/deref accounting (always on; audited by the sanitizer):
+        # every local put/fetch/free of gids owned HERE, plus the set of
+        # indices that were freed - so a late fetch can be classified as
+        # use-after-free rather than never-registered (PHY105)
+        self.puts = 0
+        self.local_fetches = 0
+        self.frees = 0
+        self._freed: set[int] = set()
         if endpoint is not None:
             endpoint.register("agas_fetch", self._on_fetch)
             endpoint.register("agas_free", self._on_free)
@@ -105,6 +114,7 @@ class ObjectDirectory:
         with self._lock:
             idx = next(self._counter)
             self._store[idx] = value
+            self.puts += 1
         return RemoteRef(gid=(self.rank, idx), nbytes=_nbytes(value),
                          summary=summary)
 
@@ -122,7 +132,9 @@ class ObjectDirectory:
         if owner == self.rank:
             with self._lock:
                 if idx not in self._store:
+                    self._diagnose_miss(idx, self.rank)
                     raise KeyError(f"gid {ref.gid} not in directory")
+                self.local_fetches += 1
                 return self._store[idx]
         if self.endpoint is None:
             raise KeyError(f"gid {ref.gid} is remote and this directory "
@@ -135,21 +147,59 @@ class ObjectDirectory:
         a fire-and-forget ``agas_free``)."""
         owner, idx = ref.gid
         if owner == self.rank:
-            with self._lock:
-                self._store.pop(idx, None)
+            self._free_local(idx)
         elif self.endpoint is not None:
             self.endpoint.post(owner, "agas_free", list(ref.gid))
+
+    def _free_local(self, idx: int):
+        with self._lock:
+            present = self._store.pop(idx, None) is not None
+            if present:
+                self.frees += 1
+                self._freed.add(idx)
+            # double-free is idempotent by contract; freeing an index
+            # that was never issued is an accounting bug (PHY105)
+            unknown = not present and idx not in self._freed
+        if unknown and _san.active():
+            _san.get().record(
+                "PHY105",
+                f"locality {self.rank}: free of never-registered gid "
+                f"({self.rank}, {idx})",
+                once_key=f"free:{self.rank}:{idx}")
+
+    def _diagnose_miss(self, idx: int, requester) -> None:
+        """Classify a fetch miss for the sanitizer (caller raises)."""
+        if not _san.active():
+            return
+        kind = ("fetch after free" if idx in self._freed
+                else "fetch of never-registered gid")
+        _san.get().record(
+            "PHY105",
+            f"locality {self.rank}: {kind} ({self.rank}, {idx}) "
+            f"requested by locality {requester}",
+            once_key=f"fetch:{self.rank}:{idx}")
+
+    def audit(self) -> dict:
+        """Pin/deref accounting for this locality's slice of the address
+        space: informational (surfaced in runtime stats); imbalances that
+        are provable bugs are reported as PHY105 diagnostics instead."""
+        with self._lock:
+            return {"live": len(self._store), "puts": self.puts,
+                    "local_fetches": self.local_fetches,
+                    "frees": self.frees}
 
     # -- handlers ------------------------------------------------------------
     def _on_fetch(self, src: int, gid) -> Any:
         _, idx = gid
         with self._lock:
-            if idx not in self._store:
-                raise KeyError(f"gid {tuple(gid)} not in directory of "
-                               f"locality {self.rank}")
-            return self._store[idx]
+            present = idx in self._store
+            if present:
+                self.local_fetches += 1
+                return self._store[idx]
+        self._diagnose_miss(idx, src)
+        raise KeyError(f"gid {tuple(gid)} not in directory of "
+                       f"locality {self.rank}")
 
     def _on_free(self, src: int, gid):
         _, idx = gid
-        with self._lock:
-            self._store.pop(idx, None)
+        self._free_local(idx)

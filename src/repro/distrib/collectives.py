@@ -44,6 +44,7 @@ from typing import Any, Callable, Optional
 import jax.numpy as jnp
 import numpy as np
 
+from ..analysis import sanitize as _san
 from .messaging import Endpoint, PeerLostError
 
 __all__ = ["CODECS", "Fp32Codec", "GradCodec", "OneBitCodec",
@@ -195,7 +196,8 @@ class RingAllReduce:
     One instance lives on each locality's endpoint for the process
     lifetime (``Locality``/``DistributedGraph`` construct it so the
     ``grad_ring`` handler exists before any peer can send - posts to an
-    unregistered action are dropped silently).  ``configure`` arms it
+    unregistered action are dropped, counted in ``unhandled_posts`` and
+    warned about, but never delivered late).  ``configure`` arms it
     for one DDP run: it picks the codec, resets codec state, bumps the
     generation (stale segments of an aborted earlier run are dropped by
     generation), and zeroes the per-run ``wire_bytes`` counter.
@@ -258,6 +260,14 @@ class RingAllReduce:
         codec = get_codec(codec_name)
         codec.reset(plan)
         with self._cond:
+            if gen is not None and int(gen) < self._gen and _san.active():
+                # a regressed generation would resurrect stale inbox
+                # segments this ring already agreed to drop (PHY103)
+                _san.get().record(
+                    "PHY103",
+                    f"rank {self.rank}: ring generation regressed "
+                    f"{self._gen} -> {int(gen)} in configure()",
+                    once_key=f"{self.rank}:{self._gen}:{gen}")
             self._gen = int(gen) if gen is not None else self._gen + 1
             gen = self._gen
             self._inbox = {k: v for k, v in self._inbox.items()
@@ -323,6 +333,7 @@ class RingAllReduce:
             codec, plan, gen = self._codec, self._plan, self._gen
         payloads = codec.encode(bufs)
         if self.world > 1:
+            assert self.endpoint is not None  # world > 1 requires a fabric
             succ = (self.rank + 1) % self.world
             for i, data in enumerate(payloads):
                 try:
@@ -380,6 +391,7 @@ class RingAllReduce:
             self._inbox[key] = (msg["data"], msg.get("meta"))
             self._cond.notify_all()
         if msg["hop"] < self.world - 1:            # relay around the ring
+            assert self.endpoint is not None  # world > 1 requires a fabric
             succ = (self.rank + 1) % self.world
             fwd = dict(msg, hop=msg["hop"] + 1)
             try:

@@ -29,6 +29,8 @@ peer.
 """
 from __future__ import annotations
 
+import collections
+import logging
 import pickle
 import socket
 import struct
@@ -36,10 +38,14 @@ import threading
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, Optional
 
+from ..analysis import sanitize as _san
+
 try:
     import msgpack
 except ImportError:                  # pragma: no cover - container has it
     msgpack = None
+
+log = logging.getLogger("repro.distrib")
 
 __all__ = ["Endpoint", "PeerLostError", "recv_frame", "send_frame"]
 
@@ -149,6 +155,11 @@ class Endpoint:
         self.address_book: dict[int, tuple[str, int]] = {}
         self.bytes_sent = 0
         self.bytes_recv = 0
+        # posts to unregistered actions: a req gets its error acked back,
+        # but a post has nobody to tell - so every drop is counted here
+        # (surfaced through runtime stats) and warned once per action
+        self.unhandled_posts: collections.Counter = collections.Counter()
+        self._warned_unhandled: set[str] = set()
         self._pool = ThreadPoolExecutor(
             max_workers=handler_threads,
             thread_name_prefix=f"am{rank}-handler")
@@ -262,7 +273,7 @@ class Endpoint:
             with self._lock:
                 sock = self._conns.get(rank)
                 lock = self._send_locks.get(rank)
-        if sock is None:
+        if sock is None or lock is None:
             raise PeerLostError(f"no connection to locality {rank}")
         body = _pack(env)
         try:
@@ -346,6 +357,8 @@ class Endpoint:
                     f"locality {self.rank}: no handler for "
                     f"{env['action']!r}")
                 ok, value = False, err
+                if kind == "post":   # a req acks the error back; a post
+                    self._note_unhandled(env["action"], src)  # cannot
             else:
                 try:
                     ok, value = True, handler(src, payload)
@@ -356,12 +369,40 @@ class Endpoint:
                     self._send(src, {"kind": "ack", "seq": env["seq"],
                                      "src": self.rank, "action": "",
                                      "ok": ok, "payload": dumps(value)})
-                except (PeerLostError, pickle.PicklingError, TypeError):
-                    pass                    # requester is gone or value odd
+                except (PeerLostError, pickle.PicklingError,
+                        TypeError) as e:
+                    # requester is gone or the value is unpicklable; the
+                    # reply is undeliverable either way (PHY104)
+                    if _san.active():
+                        _san.get().record(
+                            "PHY104",
+                            f"locality {self.rank}: ack for "
+                            f"{env['action']!r} to locality {src} "
+                            f"dropped: {e}",
+                            once_key=f"{self.rank}:{src}:{env['action']}")
 
         if self._closed:
             return
         self._pool.submit(run)
+
+    def _note_unhandled(self, action: str, src: Optional[int]):
+        with self._lock:
+            self.unhandled_posts[action] += 1
+            first = action not in self._warned_unhandled
+            if first:
+                self._warned_unhandled.add(action)
+        if first:
+            log.warning(
+                "locality %d: dropped post to unregistered action %r "
+                "(from locality %s); further drops to it are counted "
+                "in unhandled_posts without logging", self.rank, action,
+                src)
+        if _san.active():
+            _san.get().record(
+                "PHY102",
+                f"locality {self.rank}: post to unregistered action "
+                f"{action!r} (from locality {src})",
+                once_key=f"{self.rank}:{action}")
 
     def _drop(self, rank: int):
         cb = None

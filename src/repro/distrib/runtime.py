@@ -119,7 +119,8 @@ class Locality:
         ep.register("spmd_train", self._on_spmd_train)
         # the ring registers its own "grad_ring" handler: it must exist
         # BEFORE any peer can send (posts to an unregistered action are
-        # dropped silently), so it is born with the locality
+        # dropped - counted and warned, never delivered late), so it is
+        # born with the locality
         self.grad_ring = RingAllReduce(ep, world)
         ep.register("ddp_train", self._on_ddp_train)
         ep.register("ddp_abort",
@@ -184,8 +185,10 @@ class Locality:
     def _on_stats(self, src: int, p) -> dict:
         out = self.graph.stats().to_json()
         out["directory_objects"] = len(self.directory)
+        out["directory_audit"] = self.directory.audit()
         out["bytes_sent"] = self.endpoint.bytes_sent
         out["bytes_recv"] = self.endpoint.bytes_recv
+        out["unhandled_posts"] = dict(self.endpoint.unhandled_posts)
         return out
 
     def _on_peer_lost(self, rank: int):
@@ -543,7 +546,8 @@ class DistributedGraph:
             node.home = 0
             return node
         tid = f"t{next(self._tid)}"
-        promise = self._graph.promise(name=f"{name}@L{target}", lane=lane)
+        promise = self._graph.promise(name=f"{name}@L{target}", lane=lane,
+                                      producer=f"L{target}")
         promise.home = target
         rec = _TaskRecord(tid=tid, name=name, lane=lane, fn=fn, pin=pin,
                           idempotent=idempotent, target=target,
@@ -639,6 +643,7 @@ class DistributedGraph:
             raise
 
     def _send_spawn(self, rec: _TaskRecord):
+        assert rec.payload is not None  # _dispatch resolved it before sending
         args, kwargs = rec.payload
         with rec.lock:   # one spawner at a time: dispatch vs peer-loss
             while True:
@@ -674,6 +679,7 @@ class DistributedGraph:
         return alive[next(self._rr[lane]) % len(alive)]
 
     def _run_local(self, rec: _TaskRecord):
+        assert rec.payload is not None  # _dispatch resolved it before sending
         node = self._graph.defer(
             _LocalCall(rec.fn, self.directory, pin=rec.pin,
                        summary=rec.name),
@@ -817,7 +823,8 @@ class DistributedGraph:
         for r in ranks:
             key = (int(step), int(r))
             p = self._graph.promise(name=f"ckpt:entry{r}:{step}",
-                                    lane=Lane.CHECKPOINT)
+                                    lane=Lane.CHECKPOINT,
+                                    producer=f"L{r}")
             settle = None
             with self._lock:
                 done = self._spmd_done.get(int(r))
@@ -971,7 +978,9 @@ class DistributedGraph:
                     "bytes_sent": self.endpoint.bytes_sent,
                     "bytes_recv": self.endpoint.bytes_recv,
                     "ckpt_leaf_wire_bytes": self.ckpt_leaf_wire_bytes,
-                    "grad_wire_bytes": self.grad_wire_bytes}
+                    "grad_wire_bytes": self.grad_wire_bytes,
+                    "unhandled_posts": dict(
+                        self.endpoint.unhandled_posts)}
 
     def remote_stats(self, rank: int, timeout: float = 30.0) -> dict:
         """A worker locality's own ``RuntimeStats`` JSON (plus directory

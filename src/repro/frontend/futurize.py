@@ -49,6 +49,12 @@ class TraceNode:
     name: str
     lane: str
     deps: tuple            # indices of in-trace dependency nodes, sorted
+    # structural metadata for the static linter (repro.analysis.lint):
+    # node kind (task | promise | immediate | join) and, for promises,
+    # the declared producer - absent from signature() on purpose, so the
+    # trace-shape contract of PR 2 is unchanged
+    kind: str = "task"
+    producer: str = ""
 
 
 class Trace:
@@ -75,8 +81,10 @@ class Trace:
             self._index[id(node)] = idx
             dep_ids = tuple(sorted(self._index[id(d)] for d in deps
                                    if id(d) in self._index))
-            self.nodes.append(TraceNode(index=idx, name=node.name,
-                                        lane=node.lane.name, deps=dep_ids))
+            self.nodes.append(TraceNode(
+                index=idx, name=node.name, lane=node.lane.name,
+                deps=dep_ids, kind=getattr(node, "_kind", "task"),
+                producer=getattr(node, "_producer", "")))
 
     def names(self) -> list[str]:
         return [n.name for n in self.nodes]

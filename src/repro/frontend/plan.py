@@ -316,6 +316,23 @@ class Session:
         the ``to_json`` schema)."""
         return self.runtime.stats()
 
+    def lint(self, *, strict_lanes: bool = False):
+        """Run the static phylint passes over this session's live graph.
+
+        Snapshots every node the runtime still holds (in-flight and
+        recently retired) and applies the PHY001-PHY006 rule set
+        (DESIGN.md §12).  Works for any locality count - unlike the
+        dryrun mirrors in ``repro.analysis.trace_builders``, this sees
+        the promise/dispatch pairs a distributed run actually created.
+
+        Returns:
+            List of ``repro.analysis.lint.Finding``, empty when clean.
+        """
+        from ..analysis import lint as lint_mod
+
+        return lint_mod.lint(lint_mod.LintGraph.from_graph(self.runtime),
+                             strict_lanes=strict_lanes)
+
     def kill_locality(self, rank: Optional[int] = None) -> Optional[int]:
         """Failure drill: SIGKILL a worker locality (the highest-ranked
         alive one by default).  Its in-flight tasks re-spawn elsewhere.

@@ -15,12 +15,9 @@ shift-and-add over a [bm, C/32, 32] view.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 
 def _quant_kernel(g_ref, e_ref, packed_ref, scale_ref, err_ref):

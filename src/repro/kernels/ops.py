@@ -10,7 +10,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from . import flash_attention as _fa
 from . import mamba2_scan as _m2

@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run sweep: lower + compile every (arch x shape x mesh)
 cell.  The per-cell body - lowering, memory/cost analysis, collective
 inventory, roofline terms - is ``frontend.Session.dryrun``; this module is
@@ -13,6 +10,10 @@ Usage:
   python -m repro.launch.dryrun --all [--mesh both] [--strategy phylanx]
   python -m repro.launch.dryrun --list
 """
+import os
+# must land before the first jax import in this process
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
 import json
 import time
 from pathlib import Path
@@ -26,8 +27,9 @@ from repro.frontend.plan import HBM_BYTES  # noqa: F401
 from repro.frontend.plan import ICI_BW_PER_LINK  # noqa: F401
 from repro.frontend.plan import ICI_LINKS  # noqa: F401
 from repro.frontend.plan import PEAK_FLOPS  # noqa: F401
-from repro.frontend.plan import (cell_is_applicable, lower_cell,
-                                 roofline_terms)
+from repro.frontend.plan import lower_cell  # noqa: F401
+from repro.frontend.plan import roofline_terms  # noqa: F401
+from repro.frontend.plan import cell_is_applicable
 
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str,

@@ -15,10 +15,8 @@ optimized path uses the explicit flash-decoding combine in core.collectives.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 import math
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -10,9 +10,8 @@ places them on the mesh.
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
 from ..core.sharding import ParamSpec

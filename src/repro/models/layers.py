@@ -6,10 +6,6 @@ architecture-agnostic requirement R8: models never mention mesh axes.
 """
 from __future__ import annotations
 
-import dataclasses
-import math
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 

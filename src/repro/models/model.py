@@ -16,14 +16,13 @@ Contract (used by core.steps, launch.dryrun, examples):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
 from ..core import compat
 from ..core.sharding import ParamSpec, act_constrain
-from . import attention, blocks, layers, moe, ssm
+from . import blocks, layers, moe
 
 
 def stack_specs(tree, n: int):

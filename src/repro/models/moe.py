@@ -17,9 +17,7 @@ routing stays local to a data shard.
 """
 from __future__ import annotations
 
-import dataclasses
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,6 @@ structure on TPU.
 from __future__ import annotations
 
 import math
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -216,7 +215,6 @@ def mamba2_step(x, state, p, cfg):
 def mlstm_specs(d: int, *, n_heads: int, expand: int = 2,
                 d_conv: int = 4) -> dict:
     d_in = expand * d
-    P = d_in // n_heads
     return {
         "up_proj": ParamSpec((d, 2 * d_in), ("embed", "inner")),
         "conv_w": ParamSpec((d_conv, d_in), ("conv", "inner"), init="scaled",
@@ -358,7 +356,6 @@ def mlstm_step(x, state, p, cfg):
     B, _, D = x.shape
     d_in = cfg.expand * D
     H = cfg.n_heads
-    P = d_in // H
     dt_f = x.dtype
     q, k, v, i_pre, f_pre, xi, z, conv_cache = _mlstm_qkvif(
         x, p, cfg, conv_cache=state["conv"])

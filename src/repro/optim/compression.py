@@ -12,9 +12,7 @@ on TPU the Pallas kernels take over via kernels/ops.py.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
-from jax import lax
 
 from ..core import compat, fusion
 

@@ -12,7 +12,6 @@ Two state layouts:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,307 @@
+"""phylint (DESIGN.md §12): static rule catalogue over seeded defects,
+dryrun-builder parity with real traced sessions, and the runtime
+concurrency sanitizer (deadlock watchdog, protocol checks, AGAS audit)."""
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (DeadlockError, LintGraph, plan_traces,
+                            sanitize, serve_trace, step_contract,
+                            train_trace)
+from repro.analysis import lint as lint_mod
+from repro.core.futures import FuturizedGraph
+from repro.frontend import Plan, tracing
+
+ARCH = "qwen2.5-3b"
+
+
+@pytest.fixture(autouse=True)
+def _clean_sanitizer():
+    sanitize.get().clear()
+    yield
+    sanitize.get().clear()
+
+
+def _rules(graph, **kw):
+    return [f.rule for f in lint_mod.lint(graph, **kw)]
+
+
+# -- static rules over seeded defects ----------------------------------------
+
+def test_rule_catalogue_ids_are_stable():
+    assert sorted(lint_mod.STATIC_RULES) == [
+        "PHY001", "PHY002", "PHY003", "PHY004", "PHY005", "PHY006"]
+    assert sorted(sanitize.DYNAMIC_RULES) == [
+        "PHY101", "PHY102", "PHY103", "PHY104", "PHY105"]
+
+
+def test_seeded_cycle_is_exactly_phy001():
+    g = LintGraph(label="cyc")
+    a = g.add("a")
+    b = g.add("b", deps=[a])
+    g.nodes[a].deps = (b,)                      # plant the back edge
+    g.mark_forced(b)
+    found = lint_mod.lint(g)
+    assert [f.rule for f in found] == ["PHY001"]
+    assert set(found[0].nodes) == {"a", "b"}
+
+
+def test_seeded_orphan_promise_is_exactly_phy002():
+    g = LintGraph(label="orph")
+    p = g.add("entry", kind="promise")           # no producer registered
+    g.mark_forced(g.add("consumer", deps=[p]))
+    assert _rules(g) == ["PHY002"]
+    # a promise with a committed producer is legitimate
+    g2 = LintGraph(label="ok")
+    p2 = g2.add("entry", kind="promise", producer="L1")
+    g2.mark_forced(g2.add("consumer", deps=[p2]))
+    assert _rules(g2) == []
+
+
+def test_seeded_lane_inversion_is_exactly_phy003():
+    g = LintGraph(label="inv")
+    s = g.add("ckpt:shard", lane="CHECKPOINT")
+    g.mark_forced(g.add("step", lane="COMPUTE", deps=[s]))
+    assert _rules(g) == ["PHY003"]
+
+
+def test_prefetch_feed_edge_exempt_unless_strict():
+    g = LintGraph(label="feed")
+    pf = g.add("prefetch:0", lane="PREFETCH")
+    g.mark_forced(g.add("step:0", lane="COMPUTE", deps=[pf]))
+    assert _rules(g) == []
+    assert _rules(g, strict_lanes=True) == ["PHY003"]
+
+
+def test_dead_node_is_phy004_only_with_forced_info():
+    g = LintGraph(label="dead")
+    g.add("unused")
+    g.add("kept", forced=True)
+    assert _rules(g) == ["PHY004"]               # add(forced=...) set the flag
+    g2 = LintGraph(label="noinfo")
+    g2.add("unused")
+    assert _rules(g2) == []                      # no liveness info: no verdict
+    # cancelled sinks (prefetch lookahead) are not dead
+    g3 = LintGraph(label="cancelled")
+    g3.add("prefetch:6", lane="PREFETCH", cancelled=True)
+    g3.mark_forced(g3.add("kept"))
+    assert _rules(g3) == []
+
+
+def test_seeded_donation_after_use_is_exactly_phy005():
+    g = LintGraph(label="don")
+    g.add("step:0", kind="device", uses=("params@0", "batch@0"),
+          donates=("params@0",))
+    g.add("capture:late", kind="device", uses=("params@0",))
+    found = lint_mod.lint(g)
+    assert [f.rule for f in found] == ["PHY005"]
+    assert "params@0" in found[0].message
+
+
+def test_fanin_hotspot_is_phy006():
+    g = LintGraph(label="fan")
+    deps = [g.add(f"shard{i}") for i in range(70)]
+    g.mark_forced(g.add("manifest", deps=deps))
+    assert _rules(g) == ["PHY006"]
+    assert _rules(g, fanin_threshold=128) == []
+
+
+# -- shipped configs lint clean ----------------------------------------------
+
+def test_every_shipped_config_dryrun_lints_clean():
+    from repro.configs import ARCH_IDS
+    variants = [{}, {"ddp": True, "localities": 2},
+                {"spmd": True, "localities": 2}]
+    graphs = 0
+    for aid in ARCH_IDS:
+        for extra in variants:
+            for name, g in plan_traces(Plan(arch=aid, tiny=True,
+                                            **extra)).items():
+                graphs += 1
+                assert _rules(g) == [], (aid, extra, name)
+    assert graphs >= 3 * len(ARCH_IDS)
+
+
+def test_phylint_cli_strict_is_clean_and_lists_rules():
+    root = Path(__file__).resolve().parent.parent
+    out = subprocess.run(
+        [sys.executable, str(root / "tools" / "phylint.py"),
+         "--arch", ARCH, "--strict"],
+        capture_output=True, text=True, timeout=120)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "clean" in out.stdout
+    rules = subprocess.run(
+        [sys.executable, str(root / "tools" / "phylint.py"), "--list-rules"],
+        capture_output=True, text=True, timeout=120)
+    assert "PHY001" in rules.stdout and "PHY105" in rules.stdout
+
+
+def test_multi_locality_standard_train_trace_refuses():
+    with pytest.raises(ValueError, match="from_trace"):
+        train_trace(Plan(arch=ARCH, localities=2))
+
+
+def test_step_contract_declares_real_donation_sets():
+    from repro.core import steps as steps_lib
+    assert steps_lib.TrainStep.donated_buffers == ("params", "opt")
+    assert steps_lib.DDPStep.donated_buffers == ("params", "opt")
+    assert steps_lib.ServeStep.donated_buffers == ("cache",)
+    for ddp in (False, True):
+        g = step_contract(Plan(arch=ARCH, ddp=ddp,
+                               localities=2 if ddp else 1))
+        assert _rules(g) == []
+
+
+# -- builder parity with a real traced session -------------------------------
+
+def _shape_set(nodes, name_of):
+    """{(name, lane, dep-names)} with the timing-dependent ckpt chain edge
+    (gate -> previous manifest, present only when the previous save is
+    still in flight) normalized away."""
+    out = set()
+    for n in nodes:
+        deps = tuple(name_of(d) for d in n.deps)
+        if n.name.startswith("ckpt:gate:"):
+            deps = tuple(d for d in deps if not d.startswith("ckpt:manifest:"))
+        out.add((n.name, n.lane, deps))
+    return out
+
+
+def test_builders_mirror_traced_session_and_live_graph_lints_clean(tmp_path):
+    plan = Plan(arch=ARCH, batch=4, seq=16)
+    with plan.compile() as session:
+        with tracing(graph=session.runtime) as tr:
+            session.train(steps=6, ckpt_dir=str(tmp_path), ckpt_every=2,
+                          log_every=2, verbose=False)
+        real = _shape_set(tr.nodes, lambda d: tr.nodes[d].name)
+        built_g = train_trace(plan, steps=6, ckpt_every=2, log_every=2)
+        built = _shape_set(built_g.nodes, lambda d: built_g.nodes[d].name)
+        assert real == built
+
+        # the trace-derived graph and the live runtime graph both lint clean
+        assert _rules(LintGraph.from_trace(tr)) == []
+        assert [f.rule for f in session.lint()] == []
+
+        out = session.serve(requests=4, slots=2, prompt_len=16, gen_len=4,
+                            verbose=False)
+    sig = out["trace"]
+    real_serve = {(n, lane, tuple(sig[d][0] for d in deps))
+                  for n, lane, deps in sig}
+    g = serve_trace(plan, requests=4, gen_len=4, slots=2)
+    built_serve = {(n.name, n.lane, tuple(g.nodes[d].name for d in n.deps))
+                   for n in g.nodes}
+    assert real_serve == built_serve
+
+
+# -- dynamic sanitizer -------------------------------------------------------
+
+def test_sanitizer_env_activation(monkeypatch):
+    monkeypatch.delenv("PHYRAX_SANITIZE", raising=False)
+    assert not sanitize.active()
+    monkeypatch.setenv("PHYRAX_SANITIZE", "1")
+    assert sanitize.active()
+    monkeypatch.setenv("PHYRAX_SANITIZE", "0")
+    assert not sanitize.active()
+
+
+def test_watchdog_raises_on_pool_exhaustion_deadlock():
+    g = FuturizedGraph(max_workers=1, name="dl")
+    try:
+        with sanitize.enabled(deadlock_after=0.3, chunk=0.05):
+            def outer():
+                return g.defer(lambda: 42, name="inner").result(timeout=30)
+            f = g.defer(outer, name="outer")
+            with pytest.raises(DeadlockError, match="PHY101"):
+                f.result(timeout=15)
+        diags = sanitize.get().diagnostics("PHY101")
+        assert diags and "inner" in diags[0].detail   # the dumped cycle
+    finally:
+        g.shutdown(wait=False)
+
+
+def test_watchdog_raises_on_unproduced_promise_stall():
+    g = FuturizedGraph(max_workers=2, name="stall")
+    try:
+        with sanitize.enabled(deadlock_after=0.2, orphan_after=0.5,
+                              chunk=0.05):
+            p = g.promise(name="never")          # nobody committed to it
+            f = g.defer(lambda x: x, p, name="consumer")
+            with pytest.raises(DeadlockError, match="promise"):
+                f.result(timeout=15)
+        p.set_result(None)                       # unwedge for shutdown
+    finally:
+        g.shutdown(wait=True)
+
+
+def test_watchdog_trusts_producer_backed_promises():
+    import threading
+    g = FuturizedGraph(max_workers=2, name="prod")
+    try:
+        with sanitize.enabled(deadlock_after=0.2, orphan_after=0.5,
+                              chunk=0.05):
+            p = g.promise(name="ext", producer="L1")
+            f = g.defer(lambda x: x + 1, p, name="consumer")
+            threading.Timer(1.0, lambda: p.set_result(41)).start()
+            assert f.result(timeout=15) == 42    # waited well past orphan_after
+        assert sanitize.get().diagnostics() == []
+    finally:
+        g.shutdown(wait=True)
+
+
+def test_unregistered_post_counted_and_warned_once(caplog):
+    from repro.distrib.messaging import Endpoint
+    a, b = Endpoint(0), Endpoint(1)
+    try:
+        a.connect(1, b.address)
+        with sanitize.enabled():
+            with caplog.at_level("WARNING", logger="repro.distrib"):
+                a.post(1, "no_such_action", {"x": 1})
+                a.post(1, "no_such_action", {"x": 2})
+                deadline = time.monotonic() + 10
+                while (b.unhandled_posts["no_such_action"] < 2
+                       and time.monotonic() < deadline):
+                    time.sleep(0.02)
+        assert b.unhandled_posts["no_such_action"] == 2
+        warned = [r for r in caplog.records if r.name == "repro.distrib"
+                  and "no_such_action" in r.getMessage()]
+        assert len(warned) == 1                  # warn once per action name
+        diags = sanitize.get().diagnostics("PHY102")
+        assert len(diags) == 1                   # coalesced by (rank, action)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_agas_fetch_after_free_and_bad_free_are_phy105():
+    from repro.distrib.agas import ObjectDirectory, RemoteRef
+    d = ObjectDirectory(rank=0)
+    ref = d.put({"w": 1}, summary="weights")
+    assert d.fetch(ref) == {"w": 1}
+    d.free(ref)
+    with sanitize.enabled():
+        with pytest.raises(KeyError):
+            d.fetch(ref)
+        d.free(RemoteRef(gid=(0, 999)))          # never registered
+        kinds = [x.message for x in sanitize.get().diagnostics("PHY105")]
+    assert any("fetch after free" in m for m in kinds)
+    assert any("never-registered" in m for m in kinds)
+    assert d.audit() == {"live": 0, "puts": 1, "local_fetches": 1,
+                         "frees": 1}
+
+
+def test_ring_generation_regression_is_phy103():
+    import numpy as np
+
+    from repro.core.fusion import make_plan
+    from repro.distrib.collectives import RingAllReduce
+
+    ring = RingAllReduce(None, world=1)
+    plan = make_plan({"w": np.zeros((4, 4), np.float32)})
+    with sanitize.enabled():
+        ring.configure("fp32", plan, gen=5)
+        ring.configure("fp32", plan, gen=3)      # stale generation resurfaces
+        diags = sanitize.get().diagnostics("PHY103")
+    assert len(diags) == 1 and "5 -> 3" in diags[0].message

@@ -184,7 +184,7 @@ def test_dp_scaling_changes_nothing_semantically():
 def test_dryrun_small_cell_end_to_end(tmp_path):
     """One real dry-run cell (xlstm decode) through the production 512-chip
     mesh in a subprocess - proves the launcher path itself."""
-    out = run_devices(f"""
+    run_devices(f"""
         import sys
         sys.argv = ['dryrun', '--arch', 'xlstm-350m', '--shape', 'decode_32k',
                     '--mesh', 'single', '--out', r'{tmp_path}', '--force']

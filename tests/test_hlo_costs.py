@@ -1,8 +1,6 @@
 """Loop-aware HLO cost analysis: the roofline's source of truth."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from helpers import run_devices
 from repro.core import hlo_analysis, hlo_costs

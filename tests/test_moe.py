@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.sharding import init_params
 from repro.models import moe
@@ -37,7 +36,6 @@ def test_dense_equivalence_with_full_capacity_topE():
     # dense reference
     logits = x.reshape(-1, d) @ p["router"]
     w = jax.nn.softmax(logits, -1)
-    dt = x.dtype
     xin = jnp.broadcast_to(x.reshape(-1, d)[None], (E, 8, d))
     h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xin, p["w_gate"]))
     h = h * jnp.einsum("ecd,edf->ecf", xin, p["w_up"])

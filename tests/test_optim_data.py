@@ -1,9 +1,7 @@
 """Optimizers vs numpy reference; data pipeline determinism/learnability;
 grain policy; futures pipeline."""
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.futures import FuturizedGraph, Pipeline
 from repro.data.pipeline import HARStream, LMStream, Prefetcher

@@ -10,7 +10,6 @@ NEVER silently skips."""
 import tempfile
 from pathlib import Path
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -132,7 +131,6 @@ def test_exchange_phylanx_fuse_mask_partitions_correctly():
     """Sharding-aware fusion (§Perf A2): masked-out leaves bypass buckets
     but every leaf still comes back with its own value (identity fn)."""
     from repro.core import overlap
-    import jax
 
     tree = {"big_sharded": jnp.arange(64.0).reshape(8, 8),
             "small_a": jnp.ones(3), "small_b": jnp.ones(5) * 2}

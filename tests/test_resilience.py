@@ -1,6 +1,5 @@
 """HPX-style software resilience: replay, replicate+consensus, checksums,
 straggler policy (paper R9 / §4.1)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

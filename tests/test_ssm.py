@@ -2,9 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.configs import get_config
 from repro.core.sharding import init_params
 from repro.models import ssm
 

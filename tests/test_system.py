@@ -3,7 +3,6 @@ training convergence, the paper's CNN, serving, TiledArray metadata."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.core import steps as steps_lib

@@ -2,10 +2,12 @@
 
 Every ``DESIGN.md#<anchor>`` markdown link and every textual
 ``DESIGN.md §N`` section reference found in README.md and docs/API.md -
-plus every ``§N`` mention inside DESIGN.md itself - must resolve to a
-real DESIGN.md heading.  Run by the ``docs`` CI job next to the
-generated-API staleness gate, so renaming or deleting a DESIGN.md
-section without fixing its referrers fails the build.
+plus every ``§N`` mention inside DESIGN.md itself, and the ``DESIGN.md
+§N`` pointers embedded in source docstrings of the phylint tooling and
+the CI workflow - must resolve to a real DESIGN.md heading.  Run by the
+``docs`` CI job next to the generated-API staleness gate, so renaming or
+deleting a DESIGN.md section without fixing its referrers fails the
+build.
 
     python tools/check_doc_anchors.py
 """
@@ -15,8 +17,19 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
 
-# files scanned for references into DESIGN.md
-REFERRERS = ["README.md", "docs/API.md", "DESIGN.md"]
+# files scanned for references into DESIGN.md; the source files carry
+# rule-catalogue pointers ("DESIGN.md §12") in their docstrings and
+# diagnostics, and must not rot when sections are renumbered
+REFERRERS = [
+    "README.md",
+    "docs/API.md",
+    "DESIGN.md",
+    "src/repro/analysis/__init__.py",
+    "src/repro/analysis/lint.py",
+    "src/repro/analysis/sanitize.py",
+    "tools/phylint.py",
+    ".github/workflows/ci.yml",
+]
 
 
 def github_slug(heading: str) -> str:

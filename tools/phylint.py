@@ -1,0 +1,104 @@
+"""phylint CLI: statically lint the execution trees of shipped configs.
+
+Dryrun-traces every architecture in ``repro.configs`` (no devices, no
+parameters - the builders in ``repro.analysis.trace_builders`` mirror the
+host trees ``Session.train`` / ``Session.serve`` would build) and runs
+the PHY001-PHY006 static passes (DESIGN.md §12) over each graph.  The
+``phylint`` CI job runs it with ``--all-configs --strict`` so a config or
+loop change that introduces a cycle, an orphaned promise, a lane
+inversion, a dead node, or a donation-after-use hazard fails the build.
+
+    python tools/phylint.py --all-configs --strict
+    python tools/phylint.py --arch qwen3-4b --variant ddp
+    python tools/phylint.py --list-rules
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+#: Plan variants traced per architecture: standard single-locality,
+#: fabric-DDP shadow, and SPMD shadow (DESIGN.md §10-§11).  DDP/SPMD
+#: builders mirror the driver tree, so localities=2 is representative.
+VARIANTS = {
+    "standard": dict(),
+    "ddp": dict(ddp=True, localities=2),
+    "spmd": dict(spmd=True, localities=2),
+}
+
+
+def iter_graphs(arch_ids, variants):
+    from repro.analysis import plan_traces
+    from repro.frontend.plan import Plan
+
+    for aid in arch_ids:
+        for vname in variants:
+            plan = Plan(arch=aid, tiny=True, **VARIANTS[vname])
+            for wname, graph in plan_traces(plan).items():
+                yield f"{aid}/{vname}/{wname}", graph
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="phylint", description=__doc__.splitlines()[0])
+    ap.add_argument("--all-configs", action="store_true",
+                    help="lint every architecture in repro.configs")
+    ap.add_argument("--arch", action="append", default=[],
+                    help="lint one architecture id (repeatable)")
+    ap.add_argument("--variant", action="append", default=[],
+                    choices=sorted(VARIANTS),
+                    help="restrict to plan variants (default: all)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on any finding")
+    ap.add_argument("--strict-lanes", action="store_true",
+                    help="also flag the PREFETCH->COMPUTE feed edge "
+                         "(PHY003 without the exemption)")
+    ap.add_argument("--fanin-threshold", type=int, default=None,
+                    help="override the PHY006 fan-in threshold")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue and exit")
+    args = ap.parse_args(argv)
+
+    from repro.analysis import lint as lint_mod
+    from repro.analysis.sanitize import DYNAMIC_RULES
+
+    if args.list_rules:
+        for rid, desc in sorted({**lint_mod.STATIC_RULES,
+                                 **DYNAMIC_RULES}.items()):
+            print(f"{rid}  {desc}")
+        return 0
+
+    from repro.configs import ARCH_IDS
+
+    arch_ids = list(ARCH_IDS) if args.all_configs or not args.arch \
+        else args.arch
+    unknown = [a for a in arch_ids if a not in ARCH_IDS]
+    if unknown:
+        ap.error(f"unknown arch id(s): {', '.join(unknown)} "
+                 f"(known: {', '.join(ARCH_IDS)})")
+    variants = args.variant or sorted(VARIANTS)
+
+    kwargs = {"strict_lanes": args.strict_lanes}
+    if args.fanin_threshold is not None:
+        kwargs["fanin_threshold"] = args.fanin_threshold
+
+    graphs = findings = 0
+    for label, graph in iter_graphs(arch_ids, variants):
+        graphs += 1
+        found = lint_mod.lint(graph, **kwargs)
+        findings += len(found)
+        for f in found:
+            where = f" [{', '.join(f.nodes)}]" if f.nodes else ""
+            hint = f"  ({f.src})" if f.src else ""
+            print(f"{label}: {f.rule}: {f.message}{where}{hint}")
+    status = "clean" if findings == 0 else f"{findings} finding(s)"
+    print(f"phylint: {graphs} graph(s) over {len(arch_ids)} config(s): "
+          f"{status}")
+    return 1 if (findings and args.strict) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
