@@ -1,0 +1,185 @@
+"""Elastic scale-out: join latency, work-steal uptake, and AGAS
+rebalance cost when a locality dials into a RUNNING session
+(DESIGN.md §13).
+
+Three cells:
+
+  * ``static``     - 1- and 2-locality reference trains (median
+                     steady-state step time, same hook timing as
+                     ``ddp_throughput``).
+  * ``elastic``    - a 1-locality elastic train that gains a worker at
+                     the end of warmup: reports the blocking
+                     ``add_locality`` latency (spawn + hello + gossip +
+                     rebalance), post-join step time, ``stolen_tasks``
+                     and the final-loss delta vs the static run (must
+                     be exactly 0.0 - stealing moves placement, never
+                     values; re-asserted here outside pytest).
+  * ``rebalance``  - a bare graph with pinned driver objects: join
+                     latency as a function of migrated state, plus the
+                     stale-ref deref cost through forwarding stubs.
+
+Writes the versioned ``BENCH_elastic_scaleout.json`` (repo root;
+commit it when regenerating on a reference machine):
+
+  PYTHONPATH=src python -m benchmarks.elastic_scaleout            # full
+  PYTHONPATH=src python -m benchmarks.elastic_scaleout --smoke    # CI
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+from repro.distrib import DistributedGraph
+from repro.frontend.plan import Plan
+
+VERSION = 1
+
+
+def _plan(**kw):
+    kw.setdefault("arch", "qwen2.5-3b")
+    kw.setdefault("batch", 4)
+    kw.setdefault("seq", 16)
+    kw.setdefault("seed", 0)
+    return Plan(**kw)
+
+
+class _Stamps:
+    def __init__(self, session=None, join_at=None):
+        self.times: list = []
+        self.session = session
+        self.join_at = join_at
+        self.join_s = None
+
+    def on_step(self, it, metrics):
+        if it == self.join_at:
+            t0 = time.perf_counter()
+            self.session.add_locality()
+            self.join_s = time.perf_counter() - t0
+        if self.join_at is not None and it == self.join_at + 2:
+            # one device-step-sized stall: the joiner drains, goes
+            # hungry, and steerable prefetch builds start diverting to
+            # it - the deterministic steal window (same as the drill in
+            # tests/test_elastic.py)
+            time.sleep(0.25)
+        self.times.append(time.perf_counter())
+
+
+def _median_dt(times, skip):
+    deltas = sorted(b - a for a, b in zip(times[skip:], times[skip + 1:]))
+    return max(deltas[len(deltas) // 2], 1e-6)
+
+
+def run_static(localities: int, *, warmup: int, timed: int) -> dict:
+    plan = _plan(localities=localities) if localities > 1 else _plan()
+    stamps = _Stamps()
+    with plan.compile() as session:
+        out = session.train(steps=warmup + timed, hooks=stamps,
+                            log_every=warmup + timed, verbose=False)
+    dt = _median_dt(stamps.times, warmup)
+    return {"cell": "static", "localities": localities,
+            "steps_per_s": round(1.0 / dt, 3),
+            "step_ms": round(1e3 * dt, 3),
+            "final_loss": float(out["final_loss"])}
+
+
+def run_elastic(*, warmup: int, timed: int, ref_loss: float) -> dict:
+    with _plan(elastic=True).compile() as session:
+        stamps = _Stamps(session, join_at=warmup)
+        out = session.train(steps=warmup + timed, hooks=stamps,
+                            log_every=warmup + timed, verbose=False)
+        d = out["runtime_stats"]["distributed"]
+    if d["joined_localities"] != 1:
+        raise AssertionError(f"join never completed: {d}")
+    if d["stolen_tasks"] <= 0:
+        raise AssertionError(f"the joiner stole nothing: {d}")
+    loss_delta = abs(float(out["final_loss"]) - ref_loss)
+    if loss_delta > 1e-6:
+        raise AssertionError(
+            f"elastic join changed the loss by {loss_delta} - stealing "
+            f"must move placement, never values")
+    dt = _median_dt(stamps.times, warmup + 3)     # post-join steady state
+    return {"cell": "elastic", "localities": "1+1",
+            "join_ms": round(1e3 * stamps.join_s, 3),
+            "steps_per_s": round(1.0 / dt, 3),
+            "step_ms": round(1e3 * dt, 3),
+            "stolen_tasks": int(d["stolen_tasks"]),
+            "migrated_objects": int(d["migrated_objects"]),
+            "membership_gen": int(d["membership_gen"]),
+            "final_loss": float(out["final_loss"]),
+            "loss_delta_vs_static": loss_delta}
+
+
+def _make_blob(i, kb):
+    import numpy as np
+    return np.full((kb * 256,), i, np.float32)      # kb KiB of payload
+
+
+def run_rebalance(n_objects: int, kb: int) -> dict:
+    g = DistributedGraph(localities=1, elastic=True)
+    try:
+        refs = [g.defer(_make_blob, i, kb, name=f"blob{i}",
+                        pin=True).result(timeout=60)
+                for i in range(n_objects)]
+        t0 = time.perf_counter()
+        g.add_locality(timeout=120)
+        join_s = time.perf_counter() - t0
+        s = g.stats()
+        if s["migrated_objects"] <= 0:
+            raise AssertionError(f"rebalance moved nothing: {s}")
+        t0 = time.perf_counter()
+        for ref in refs:                            # stale refs: stub-chased
+            g.fetch(ref)
+        deref_s = (time.perf_counter() - t0) / max(len(refs), 1)
+        return {"cell": "rebalance", "objects": n_objects,
+                "object_kib": kb,
+                "join_ms": round(1e3 * join_s, 3),
+                "migrated_objects": int(s["migrated_objects"]),
+                "stale_deref_us": round(1e6 * deref_s, 1),
+                "forwarded_fetches":
+                    int(g.directory.audit()["forwarded_fetches"])}
+    finally:
+        g.shutdown()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--warmup", type=int, default=5)
+    ap.add_argument("--timed", type=int, default=20)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI sizes (2 warmup / 8 timed steps, one "
+                         "rebalance point); asserts join + steal still")
+    ap.add_argument("--out", default=str(Path(__file__).resolve()
+                                         .parent.parent
+                                         / "BENCH_elastic_scaleout.json"))
+    args = ap.parse_args()
+    warmup, timed = (2, 8) if args.smoke else (args.warmup, args.timed)
+    results = []
+    for loc in (1, 2):
+        r = run_static(loc, warmup=warmup, timed=timed)
+        results.append(r)
+        print(f"static  W={loc}  {r['steps_per_s']:8.2f} steps/s "
+              f"({r['step_ms']:.2f} ms)", flush=True)
+    ref_loss = results[0]["final_loss"]
+    r = run_elastic(warmup=warmup, timed=timed, ref_loss=ref_loss)
+    results.append(r)
+    print(f"elastic 1+1 join {r['join_ms']:7.1f} ms  "
+          f"{r['steps_per_s']:8.2f} steps/s  stolen {r['stolen_tasks']}  "
+          f"loss delta {r['loss_delta_vs_static']:.1e}", flush=True)
+    for n, kb in ((8, 4),) if args.smoke else ((8, 4), (64, 4), (64, 64)):
+        r = run_rebalance(n, kb)
+        results.append(r)
+        print(f"rebal   {n:3d} x {kb:3d} KiB  join {r['join_ms']:7.1f} ms  "
+              f"migrated {r['migrated_objects']:3d}  stale deref "
+              f"{r['stale_deref_us']:7.1f} us", flush=True)
+    doc = {"bench": "elastic_scaleout", "version": VERSION,
+           "arch": "qwen2.5-3b", "batch": 4, "seq": 16,
+           "warmup_steps": warmup, "timed_steps": timed,
+           "smoke": bool(args.smoke), "results": results}
+    Path(args.out).write_text(json.dumps(doc, indent=2) + "\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

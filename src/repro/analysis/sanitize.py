@@ -3,8 +3,9 @@
 This module is the *collection point* for dynamic diagnostics; the hooks
 that feed it live in `core/futures.py` (wait-for-graph deadlock watchdog),
 `distrib/messaging.py` (active-message protocol checks), `distrib/agas.py`
-(pin/deref accounting) and `distrib/collectives.py` (generation-key
-monotonicity).  It deliberately imports nothing from the rest of the
+(pin/deref accounting, forwarding-stub chases), `distrib/runtime.py`
+(steal-lease / membership-generation fencing) and
+`distrib/collectives.py` (generation-key monotonicity).  It deliberately imports nothing from the rest of the
 package so that `core.futures` can import it at module load without a
 cycle.
 
@@ -19,6 +20,10 @@ PHY103       non-monotone ring generation key (configure(gen=) regressed)
 PHY104       reply/ack dropped because the peer is already dead
 PHY105       unbalanced AGAS accounting (fetch-after-free, fetch or free of
              a never-registered gid)
+PHY106       steal-lease violation: a task observed executing on two
+             localities, or a steal under a stale membership generation
+PHY107       deref chased a forwarding stub whose target is dead (freed
+             value or lost locality after an elastic rebalance)
 ===========  ==============================================================
 
 Activation: set ``PHYRAX_SANITIZE=1`` in the environment (inherited by
@@ -44,6 +49,9 @@ DYNAMIC_RULES: dict[str, str] = {
     "PHY103": "non-monotone ring generation key",
     "PHY104": "reply to dead peer dropped",
     "PHY105": "unbalanced AGAS pin/deref accounting",
+    "PHY106": "steal-lease violation (double execution or stale "
+              "membership generation)",
+    "PHY107": "deref through a dead forwarding stub",
 }
 
 

@@ -623,6 +623,16 @@ class FuturizedGraph:
                 lane_hist={k: list(v)
                            for k, v in self._stats.lane_hist.items()})
 
+    def load(self) -> dict[str, int]:
+        """Instantaneous queue pressure: ``{"ready": n, "running": n,
+        "unfinished": n}``.  An elastic locality polls this to decide it
+        is idle enough to post a ``steal_request`` (DESIGN.md §13)."""
+        with self._lock:
+            ready = sum(1 for _, _, n in self._heap
+                        if n._state is TaskState.READY)
+            return {"ready": ready, "running": self._in_flight,
+                    "unfinished": self._unfinished}
+
     def shutdown(self, wait: bool = True, cancel_pending: bool = False):
         """Drain (or cancel) outstanding work, then stop the workers.
         With ``wait=True`` every pending node - including low-priority

@@ -3,15 +3,16 @@ across processes.  ``messaging`` is the TCP active-message (parcel)
 layer, ``agas`` the global object directory, ``runtime`` the
 ``Locality``/``DistributedGraph`` scheduler that places tasks by lane +
 data affinity and streams results back as futures resolve."""
-from .agas import ObjectDirectory, RemoteRef  # noqa: F401
+from .agas import ObjectDirectory, RemoteRef, rebalance_plan  # noqa: F401
 from .collectives import (CODECS, Fp32Codec, GradCodec,  # noqa: F401
                           OneBitCodec, RingAllReduce, get_codec)
-from .messaging import Endpoint, PeerLostError  # noqa: F401
+from .messaging import Endpoint, PeerLostError, raw_request  # noqa: F401
 from .runtime import (DistributedGraph, Locality,  # noqa: F401
                       LocalityGroup, LocalityLostError, RemoteTaskError,
-                      worker_main)
+                      join_locality, worker_main)
 
 __all__ = ["CODECS", "DistributedGraph", "Endpoint", "Fp32Codec",
            "GradCodec", "Locality", "LocalityGroup", "LocalityLostError",
            "ObjectDirectory", "OneBitCodec", "PeerLostError", "RemoteRef",
-           "RemoteTaskError", "RingAllReduce", "get_codec", "worker_main"]
+           "RemoteTaskError", "RingAllReduce", "get_codec", "join_locality",
+           "raw_request", "rebalance_plan", "worker_main"]

@@ -6,9 +6,13 @@ co-located with their data instead of the data moving to the task.  The
 analogue here (DESIGN.md §9):
 
   * a ``gid`` is ``(owner_rank, index)`` - ownership is encoded in the
-    id itself, so resolution is a tuple read, never a lookup round-trip
-    (a deliberate simplification of full AGAS, which also supports
-    migration; we do not migrate, we re-create - see the failure model);
+    id itself, so resolution is a tuple read, never a lookup round-trip.
+    Under *failure* we still re-create rather than migrate (a dead
+    locality's values die with it), but elastic scale-out migrates:
+    ``rebalance`` moves a contiguous block of live objects to newcomer
+    localities and leaves a ``_Forward`` stub per moved gid, so a stale
+    ``RemoteRef`` derefs through one extra hop until refreshed
+    (DESIGN.md §13);
   * ``ObjectDirectory.put`` registers a value owned by this locality and
     returns a ``RemoteRef`` others can hold, ship, or deref;
   * ``fetch`` resolves a ref: a local dictionary hit when this locality
@@ -31,9 +35,9 @@ from typing import Any, Optional
 import numpy as np
 
 from ..analysis import sanitize as _san
-from .messaging import Endpoint
+from .messaging import Endpoint, PeerLostError
 
-__all__ = ["ObjectDirectory", "RemoteRef"]
+__all__ = ["ObjectDirectory", "RemoteRef", "rebalance_plan"]
 
 
 def _nbytes(value: Any) -> int:
@@ -72,6 +76,40 @@ class RemoteRef:
                 f"{self.summary or 'value'} ~{self.nbytes}B>")
 
 
+@dataclasses.dataclass(frozen=True)
+class _Forward:
+    """Owner-side forwarding stub left behind by ``rebalance``: the
+    value migrated to ``ref``'s locality; a deref of the old gid chases
+    the stub one hop.  Stored in ``_store`` in place of the value, so a
+    stale ``RemoteRef`` held anywhere keeps resolving."""
+    ref: RemoteRef
+
+
+def rebalance_plan(indices: list[int], owner: int,
+                   newcomers: list[int]) -> dict[int, list[int]]:
+    """Contiguous-block reassignment of one owner's live object indices
+    across ``[owner] + newcomers``.
+
+    Same ownership math as ``checkpoint.format.assign_shards`` (blocks
+    as even as possible, at most one element of spread); the owner keeps
+    the first block, each newcomer adopts one of the rest.  Pure - the
+    property suite checks totality / contiguity / balance on it
+    directly.
+
+    Returns:
+        ``{newcomer_rank: [indices to migrate]}`` (owner's keep-block is
+        implied; empty blocks are omitted).
+    """
+    from ..checkpoint.format import assign_shards
+
+    idxs = sorted(indices)
+    plan: dict[int, list[int]] = {}
+    for _sid, rank, block in assign_shards(len(idxs), [owner, *newcomers]):
+        if rank != owner and block:
+            plan[rank] = [idxs[i] for i in block]
+    return plan
+
+
 class ObjectDirectory:
     """This locality's slice of the global address space.
 
@@ -94,10 +132,15 @@ class ObjectDirectory:
         self.puts = 0
         self.local_fetches = 0
         self.frees = 0
+        # elastic rebalance accounting: objects migrated away from here,
+        # and derefs that chased a forwarding stub (one extra hop)
+        self.migrated = 0
+        self.forwarded_fetches = 0
         self._freed: set[int] = set()
         if endpoint is not None:
             endpoint.register("agas_fetch", self._on_fetch)
             endpoint.register("agas_free", self._on_free)
+            endpoint.register("agas_adopt", self._on_adopt)
 
     def __len__(self) -> int:
         with self._lock:
@@ -123,6 +166,9 @@ class ObjectDirectory:
         """Deref: local dictionary hit when owned here, one
         ``agas_fetch`` round-trip to the owner otherwise.
 
+        A gid whose value migrated away (elastic rebalance) resolves
+        through its forwarding stub transparently - one extra hop.
+
         Raises:
             KeyError: the gid was never registered or already freed.
             PeerLostError: the owning locality is gone (its values die
@@ -134,13 +180,36 @@ class ObjectDirectory:
                 if idx not in self._store:
                     self._diagnose_miss(idx, self.rank)
                     raise KeyError(f"gid {ref.gid} not in directory")
-                self.local_fetches += 1
-                return self._store[idx]
+                value = self._store[idx]
+                if not isinstance(value, _Forward):
+                    self.local_fetches += 1
+                    return value
+            return self._chase(ref, value, timeout)
         if self.endpoint is None:
             raise KeyError(f"gid {ref.gid} is remote and this directory "
                            f"has no endpoint")
-        return self.endpoint.request(owner, "agas_fetch", list(ref.gid),
-                                     timeout=timeout)
+        out = self.endpoint.request(owner, "agas_fetch", list(ref.gid),
+                                    timeout=timeout)
+        if isinstance(out, _Forward):
+            return self._chase(ref, out, timeout)
+        return out
+
+    def _chase(self, ref: RemoteRef, fwd: _Forward, timeout: float) -> Any:
+        """Deref one hop through a forwarding stub.  A chase that lands
+        on a dead locality or a freed target means the stub outlived the
+        migrated value: PHY107."""
+        with self._lock:
+            self.forwarded_fetches += 1
+        try:
+            return self.fetch(fwd.ref, timeout=timeout)
+        except (KeyError, ConnectionError) as e:
+            if _san.active():
+                _san.get().record(
+                    "PHY107",
+                    f"locality {self.rank}: deref of gid {ref.gid} chased "
+                    f"a forwarding stub to dead gid {fwd.ref.gid}: {e}",
+                    once_key=f"fwd:{self.rank}:{ref.gid}")
+            raise
 
     def free(self, ref: RemoteRef):
         """Drop the value behind ``ref`` (idempotent; remote owners get
@@ -153,7 +222,8 @@ class ObjectDirectory:
 
     def _free_local(self, idx: int):
         with self._lock:
-            present = self._store.pop(idx, None) is not None
+            value = self._store.pop(idx, None)
+            present = value is not None
             if present:
                 self.frees += 1
                 self._freed.add(idx)
@@ -166,6 +236,13 @@ class ObjectDirectory:
                 f"locality {self.rank}: free of never-registered gid "
                 f"({self.rank}, {idx})",
                 once_key=f"free:{self.rank}:{idx}")
+        if isinstance(value, _Forward) and self.endpoint is not None:
+            # freeing a migrated gid frees the migrated value too
+            try:
+                self.endpoint.post(value.ref.owner, "agas_free",
+                                   list(value.ref.gid))
+            except PeerLostError:
+                pass                  # new owner already gone; nothing held
 
     def _diagnose_miss(self, idx: int, requester) -> None:
         """Classify a fetch miss for the sanitizer (caller raises)."""
@@ -186,7 +263,56 @@ class ObjectDirectory:
         with self._lock:
             return {"live": len(self._store), "puts": self.puts,
                     "local_fetches": self.local_fetches,
-                    "frees": self.frees}
+                    "frees": self.frees, "migrated": self.migrated,
+                    "forwarded_fetches": self.forwarded_fetches}
+
+    # -- elastic rebalance ---------------------------------------------------
+    def rebalance(self, newcomers: list[int]) -> int:
+        """Migrate contiguous tail blocks of this locality's live
+        objects onto ``newcomers`` (``rebalance_plan`` math), leaving a
+        forwarding stub per moved gid so stale refs keep resolving.
+
+        Values that cannot cross the wire (unpicklable locals) and gids
+        freed mid-pass simply stay put - migration is best-effort and
+        never required for correctness.
+
+        Returns:
+            Number of objects migrated away.
+        """
+        newcomers = [r for r in newcomers if r != self.rank]
+        if not newcomers or self.endpoint is None:
+            return 0
+        with self._lock:
+            live = [i for i, v in self._store.items()
+                    if not isinstance(v, _Forward)]
+        moved = 0
+        for rank, idxs in rebalance_plan(live, self.rank, newcomers).items():
+            for idx in idxs:
+                with self._lock:
+                    value = self._store.get(idx)
+                if value is None or isinstance(value, _Forward):
+                    continue          # freed or migrated concurrently
+                try:
+                    new_ref = self.endpoint.request(
+                        rank, "agas_adopt",
+                        {"value": value,
+                         "summary": f"migrated:{self.rank}:{idx}"})
+                except Exception:  # noqa: BLE001 - unshippable value or
+                    continue       # unreachable newcomer: keep it home
+                with self._lock:
+                    still_here = idx in self._store
+                    if still_here:
+                        self._store[idx] = _Forward(ref=new_ref)
+                        self.migrated += 1
+                        moved += 1
+                if not still_here:
+                    # freed while in flight: release the adopted copy
+                    try:
+                        self.endpoint.post(rank, "agas_free",
+                                           list(new_ref.gid))
+                    except PeerLostError:
+                        pass
+        return moved
 
     # -- handlers ------------------------------------------------------------
     def _on_fetch(self, src: int, gid) -> Any:
@@ -203,3 +329,8 @@ class ObjectDirectory:
     def _on_free(self, src: int, gid):
         _, idx = gid
         self._free_local(idx)
+
+    def _on_adopt(self, src: int, p: dict) -> RemoteRef:
+        """Rebalance target side: take ownership of a migrated value and
+        return its new ref (the old owner stores it in a stub)."""
+        return self.put(p["value"], summary=p.get("summary", ""))

@@ -47,7 +47,8 @@ except ImportError:                  # pragma: no cover - container has it
 
 log = logging.getLogger("repro.distrib")
 
-__all__ = ["Endpoint", "PeerLostError", "recv_frame", "send_frame"]
+__all__ = ["Endpoint", "PeerLostError", "raw_request", "recv_frame",
+           "send_frame"]
 
 _LEN = struct.Struct("!I")           # frame length prefix; frames < 4 GiB
 
@@ -112,6 +113,44 @@ def loads(data: bytes) -> Any:
     return pickle.loads(data)
 
 
+def raw_request(address: tuple[str, int], action: str, payload: Any = None,
+                *, timeout: float = 60.0) -> Any:
+    """One-shot request over a fresh socket, no ``Endpoint`` required.
+
+    The dial-in join handshake (DESIGN.md §13) runs before the joiner has
+    a rank, so it cannot own an endpoint yet; it sends a single ``req``
+    with ``src=-1`` and the receiver acks back over this same socket
+    (see ``_dispatch``'s anonymous-requester fallback).
+
+    Args:
+        address: the listening ``(host, port)`` of a live endpoint.
+        action: registered handler name there.
+        payload: any picklable value.
+        timeout: seconds for connect and for the ack.
+    Returns:
+        The remote handler's return value.
+    Raises:
+        Exception: whatever the remote handler raised, re-raised here.
+        ConnectionError / TimeoutError: transport failure.
+    """
+    sock = socket.create_connection(tuple(address), timeout=timeout)
+    try:
+        sock.settimeout(timeout)
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        send_frame(sock, {"kind": "req", "action": action, "seq": 1,
+                          "src": -1, "payload": dumps(payload)})
+        env = recv_frame(sock)
+        value = loads(env["payload"])
+        if not env.get("ok", True):
+            raise value
+        return value
+    finally:
+        try:
+            sock.close()
+        except OSError:
+            pass
+
+
 class _Pending:
     __slots__ = ("event", "raw", "ok", "exc", "rank")
 
@@ -130,6 +169,9 @@ class Endpoint:
     Args:
         rank: this locality's rank (0 is the driver).
         host: interface to bind; loopback by default (single-node CI).
+        port: listen port; 0 (the default) picks an ephemeral one.  A
+            fixed port lets elastic joiners dial a known driver address
+            (``--elastic-port`` / ``--join``).
         handler_threads: size of the pool handlers run on.
 
     Handlers are registered per action name via ``register`` and called
@@ -138,7 +180,7 @@ class Endpoint:
     count serialized frame bytes - the benchmark's wire-cost counters.
     """
 
-    def __init__(self, rank: int, host: str = "127.0.0.1", *,
+    def __init__(self, rank: int, host: str = "127.0.0.1", *, port: int = 0,
                  handler_threads: int = 4):
         self.rank = rank
         self._handlers: dict[str, Callable[[int, Any], Any]] = {}
@@ -147,6 +189,11 @@ class Endpoint:
         self._pending: dict[int, _Pending] = {}
         self._lost: set[int] = set()
         self._lock = threading.RLock()
+        # (host, port) addresses with a dial in flight: a second dialer
+        # to the same address waits on the condition instead of opening
+        # a duplicate socket
+        self._dialing: set[tuple[str, int]] = set()
+        self._dial_cond = threading.Condition(self._lock)
         self._seq = 0
         self._closed = False
         self.on_peer_lost: Optional[Callable[[int], None]] = None
@@ -165,7 +212,7 @@ class Endpoint:
             thread_name_prefix=f"am{rank}-handler")
         self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
-        self._listener.bind((host, 0))
+        self._listener.bind((host, port))
         self._listener.listen(32)
         self.address: tuple[str, int] = self._listener.getsockname()
         self._accept_thread = threading.Thread(
@@ -181,13 +228,47 @@ class Endpoint:
     # -- connections --------------------------------------------------------
     def connect(self, rank: int, address: tuple[str, int]):
         """Ensure a live connection to ``rank`` at ``address`` (no-op if
-        one exists); identifies this endpoint to the peer."""
-        with self._lock:
+        one exists); identifies this endpoint to the peer.
+
+        Idempotent under concurrency: dials to the same (host, port)
+        collapse to one socket - a second local dialer waits for the
+        first, and a dial that loses to a simultaneous inbound
+        connection from the same peer (both sides of a join dialing
+        each other) closes its duplicate instead of adopting it.
+        """
+        address = (address[0], int(address[1]))
+        with self._dial_cond:
             if rank in self._conns or self._closed:
                 return
-            sock = socket.create_connection(tuple(address), timeout=30)
+            while address in self._dialing:
+                self._dial_cond.wait(timeout=35)
+                if rank in self._conns or self._closed:
+                    return
+            self._dialing.add(address)
+        # dial OUTSIDE the endpoint lock: a slow handshake must not
+        # stall unrelated sends / acks / reader registration
+        try:
+            sock = socket.create_connection(address, timeout=30)
             sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-            self._adopt(rank, sock)
+        except OSError:
+            with self._dial_cond:
+                self._dialing.discard(address)
+                self._dial_cond.notify_all()
+            raise
+        with self._dial_cond:
+            self._dialing.discard(address)
+            self._dial_cond.notify_all()
+            adopt = not self._closed and rank not in self._conns
+            if adopt:
+                self._adopt(rank, sock)
+        if not adopt:
+            # lost the race (inbound connection from the peer, or the
+            # endpoint closed): discard the duplicate quietly
+            try:
+                sock.close()
+            except OSError:
+                pass
+            return
         self._send(rank, {"kind": "post", "action": "__ident__", "seq": 0,
                           "src": self.rank,
                           "payload": dumps({"rank": self.rank,
@@ -261,30 +342,39 @@ class Endpoint:
         return value
 
     def _send(self, rank: int, env: dict):
-        with self._lock:
-            sock = self._conns.get(rank)
-            lock = self._send_locks.get(rank)
-        if sock is None and rank in self.address_book:
-            try:
-                self.connect(rank, self.address_book[rank])
-            except OSError as e:
-                raise PeerLostError(
-                    f"cannot reach locality {rank}: {e}") from e
+        body = _pack(env)
+        for attempt in (0, 1):
             with self._lock:
                 sock = self._conns.get(rank)
                 lock = self._send_locks.get(rank)
-        if sock is None or lock is None:
-            raise PeerLostError(f"no connection to locality {rank}")
-        body = _pack(env)
-        try:
-            with lock:
-                sock.sendall(_LEN.pack(len(body)) + body)
-        except OSError as e:
-            self._drop(rank)
-            raise PeerLostError(
-                f"send to locality {rank} failed: {e}") from e
-        with self._lock:
-            self.bytes_sent += len(body)
+            if sock is None and rank in self.address_book:
+                try:
+                    self.connect(rank, self.address_book[rank])
+                except OSError as e:
+                    raise PeerLostError(
+                        f"cannot reach locality {rank}: {e}") from e
+                with self._lock:
+                    sock = self._conns.get(rank)
+                    lock = self._send_locks.get(rank)
+            if sock is None or lock is None:
+                raise PeerLostError(f"no connection to locality {rank}")
+            try:
+                with lock:
+                    sock.sendall(_LEN.pack(len(body)) + body)
+            except OSError as e:
+                self._drop(rank, sock)
+                with self._lock:
+                    swapped = self._conns.get(rank) is not None
+                if swapped and attempt == 0:
+                    # the connection was canonicalized to a different
+                    # socket mid-send (concurrent-dial dedupe): retry
+                    # once on the surviving one
+                    continue
+                raise PeerLostError(
+                    f"send to locality {rank} failed: {e}") from e
+            with self._lock:
+                self.bytes_sent += len(body)
+            return
 
     # -- internals ----------------------------------------------------------
     def _accept_loop(self):
@@ -309,9 +399,27 @@ class Endpoint:
                 if env["action"] == "__ident__":
                     ident = loads(env["payload"])
                     rank = ident["rank"]
+                    self.address_book.setdefault(rank,
+                                                 tuple(ident["addr"]))
+                    loser = None
                     with self._lock:
-                        if rank not in self._conns:
+                        cur = self._conns.get(rank)
+                        if cur is None:
                             self._adopt_identified(rank, sock)
+                        elif cur is not sock and rank < self.rank:
+                            # concurrent bidirectional dial: both sides
+                            # converge on the socket dialed by the LOWER
+                            # rank (this inbound one here; the peer keeps
+                            # its own dial and drops ours when our ident
+                            # reaches it) - deterministic, so exactly one
+                            # logical connection survives
+                            loser = cur
+                            self._adopt_identified(rank, sock)
+                    if loser is not None:
+                        try:
+                            loser.close()
+                        except OSError:
+                            pass
                     continue
                 self._dispatch(rank if rank is not None else env.get("src"),
                                sock, env)
@@ -319,7 +427,7 @@ class Endpoint:
             pass
         finally:
             if rank is not None:
-                self._drop(rank)
+                self._drop(rank, sock)
 
     def _adopt_identified(self, rank: int, sock: socket.socket):
         # adopted from accept: register without spawning another reader
@@ -366,11 +474,20 @@ class Endpoint:
                     ok, value = False, e
             if kind == "req" and src is not None:
                 try:
-                    self._send(src, {"kind": "ack", "seq": env["seq"],
-                                     "src": self.rank, "action": "",
-                                     "ok": ok, "payload": dumps(value)})
-                except (PeerLostError, pickle.PicklingError,
-                        TypeError) as e:
+                    ack = {"kind": "ack", "seq": env["seq"],
+                           "src": self.rank, "action": "",
+                           "ok": ok, "payload": dumps(value)}
+                    try:
+                        self._send(src, ack)
+                    except PeerLostError:
+                        # an unregistered requester - the dial-in join
+                        # handshake posts from src=-1 before it has an
+                        # endpoint - gets its ack back over the socket
+                        # the request arrived on
+                        send_frame(sock, ack)
+                        with self._lock:
+                            self.bytes_sent += len(ack["payload"])
+                except (OSError, pickle.PicklingError, TypeError) as e:
                     # requester is gone or the value is unpicklable; the
                     # reply is undeliverable either way (PHY104)
                     if _san.active():
@@ -404,20 +521,35 @@ class Endpoint:
                 f"{action!r} (from locality {src})",
                 once_key=f"{self.rank}:{action}")
 
-    def _drop(self, rank: int):
+    def _drop(self, rank: int, sock: Optional[socket.socket] = None):
+        """Tear down the connection to ``rank``.
+
+        With ``sock`` given, acts only if it IS the registered
+        connection: a deduped duplicate socket dying (the loser of a
+        concurrent bidirectional dial) must not take the live connection
+        - or fire a spurious peer-lost - with it.
+        """
         cb = None
         with self._lock:
-            sock = self._conns.pop(rank, None)
-            self._send_locks.pop(rank, None)
-            fire = (sock is not None and rank not in self._lost
-                    and not self._closed)
-            if fire:
-                self._lost.add(rank)
-                cb = self.on_peer_lost
-            pend = [p for p in self._pending.values() if p.rank == rank]
-        if sock is not None:
+            cur = self._conns.get(rank)
+            if sock is not None and cur is not None and cur is not sock:
+                dead = sock            # a duplicate died, not the conn
+                fire = False
+                pend: list[_Pending] = []
+            else:
+                self._conns.pop(rank, None)
+                self._send_locks.pop(rank, None)
+                dead = cur if cur is not None else sock
+                fire = (cur is not None and rank not in self._lost
+                        and not self._closed)
+                if fire:
+                    self._lost.add(rank)
+                    cb = self.on_peer_lost
+                pend = [p for p in self._pending.values()
+                        if p.rank == rank]
+        if dead is not None:
             try:
-                sock.close()
+                dead.close()
             except OSError:
                 pass
         if fire:

@@ -52,6 +52,15 @@ def cli_args(ap: Optional[argparse.ArgumentParser] = None, *,
                         help="batch shard count for --ddp (0 = one per "
                              "locality); must divide --batch and be a "
                              "multiple of --localities")
+        ap.add_argument("--elastic", action="store_true",
+                        help="elastic membership: accept --join dial-ins "
+                             "mid-run, arm the work-stealing loop on "
+                             "every locality, and rebalance AGAS objects "
+                             "toward newcomers (DESIGN.md §13)")
+        ap.add_argument("--elastic-port", dest="elastic_port", type=int,
+                        default=0,
+                        help="fixed driver listen port for --join "
+                             "dialers (0 = ephemeral; printed at start)")
     if seq is not None:
         ap.add_argument("--seq", type=int, default=seq)
     if batch is not None:
@@ -67,7 +76,8 @@ def plan_from_args(args, **overrides) -> Plan:
     fields = {name: getattr(args, name)
               for name in ("arch", "tiny", "data", "model", "batch", "seq",
                            "seed", "localities", "spmd", "ddp",
-                           "grad_codec", "ddp_shards")
+                           "grad_codec", "ddp_shards", "elastic",
+                           "elastic_port")
               if hasattr(args, name)}
     if hasattr(args, "ckpt"):       # --ckpt -> Plan.ckpt_dir, so worker
         fields["ckpt_dir"] = args.ckpt   # localities get it at spawn

@@ -12,6 +12,7 @@ thin argparse shims over this API (DESIGN.md §8).
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 import traceback
 from typing import Any, Optional
@@ -109,6 +110,16 @@ class Plan:
             so it must be shared across them (trivially true on one
             machine; a shared mount across hosts); worker localities
             receive it at spawn via ``PHYRAX_CKPT_DIR``.
+        elastic: elastic membership + work stealing (DESIGN.md §13).
+            The driver accepts dial-in joins (``--join host:port`` /
+            ``Session.add_locality()``) mid-run; every locality runs the
+            idle-thief steal loop, so newcomers pull work immediately;
+            AGAS rebalances pinned objects toward them.  Exclusive with
+            ``spmd`` and ``ddp`` (fixed-world collectives).  A
+            ``DistributedGraph`` exists even with ``localities=1`` so a
+            1-process run can scale out.
+        elastic_port: fixed driver listen port for ``--join`` dialers
+            (0 = ephemeral; only meaningful with ``elastic=True``).
         overrides: config field overrides applied last.
     """
     arch: str = "qwen3-4b"
@@ -129,6 +140,8 @@ class Plan:
     grad_codec: str = "fp32"             # DDP wire codec: fp32 | onebit
     ddp_shards: int = 0                  # batch shards (0 = localities)
     ckpt_dir: str = ""                   # shared checkpoint dir (§10)
+    elastic: bool = False                # dial-in joins + stealing (§13)
+    elastic_port: int = 0                # --join listen port (0 = any)
     overrides: dict = dataclasses.field(default_factory=dict)
 
     # -- resolution ---------------------------------------------------------
@@ -202,6 +215,11 @@ class Session:
             raise ValueError("Plan(ddp=True) and Plan(spmd=True) are "
                              "exclusive multi-process modes: ddp shards "
                              "the batch, spmd mirrors it")
+        if plan.elastic and (plan.spmd or plan.ddp):
+            raise ValueError(
+                "Plan(elastic=True) does not compose with spmd or ddp: "
+                "their collectives assume a fixed world; elastic "
+                "membership is for the task-parallel runtime")
         if plan.ddp:
             from ..distrib.collectives import CODECS
             if plan.grad_codec not in CODECS:
@@ -216,7 +234,7 @@ class Session:
             if plan.batch % shards:
                 raise ValueError(f"batch={plan.batch} must be divisible "
                                  f"by ddp_shards={shards}")
-        if plan.localities > 1:
+        if plan.localities > 1 or plan.elastic:
             from ..distrib import DistributedGraph
             # workers get the checkpoint dir at spawn (PHYRAX_CKPT_DIR):
             # each locality pre-creates it and writes its own shards
@@ -226,9 +244,20 @@ class Session:
             init_thread = None
             if plan.spmd:
                 env, init_thread = self._start_jax_distributed(env)
+            join_spec = None
+            if plan.elastic:
+                # dial-in joiners adopt the same environment the spawned
+                # workers get (checkpoint dir, sanitizer arming...)
+                join_env = dict(env)
+                for k in ("PHYRAX_SANITIZE",):
+                    if os.environ.get(k):
+                        join_env[k] = os.environ[k]
+                join_spec = {"env": join_env}
             self.distributed = DistributedGraph(
                 localities=plan.localities, graph=self.runtime,
-                worker_env=env or None, name=f"session:{plan.arch}")
+                worker_env=env or None, name=f"session:{plan.arch}",
+                elastic=plan.elastic, elastic_port=plan.elastic_port,
+                join_spec=join_spec)
             if init_thread is not None:
                 init_thread.join(timeout=120.0)
                 if init_thread.is_alive():
@@ -332,6 +361,31 @@ class Session:
 
         return lint_mod.lint(lint_mod.LintGraph.from_graph(self.runtime),
                              strict_lanes=strict_lanes)
+
+    @property
+    def join_address(self) -> Optional[tuple]:
+        """``(host, port)`` a ``--join`` dialer should use, or None when
+        the session is not elastic."""
+        if self.distributed is None or not self.plan.elastic:
+            return None
+        return tuple(self.distributed.endpoint.address)
+
+    def add_locality(self, timeout: float = 120.0) -> int:
+        """Elastic scale-out (DESIGN.md §13): spawn one extra worker
+        locality into the *running* session and block until it is a full
+        member - peers gossiped, AGAS rebalanced, steal loop armed.
+        Safe to call from a training hook; subsequent steerable host
+        tasks may be stolen by (or diverted to) the newcomer.
+
+        Returns:
+            The new locality's rank.
+        Raises:
+            RuntimeError: the session was not compiled from an elastic
+                plan.
+        """
+        if self.distributed is None or not self.plan.elastic:
+            raise RuntimeError("add_locality needs Plan(elastic=True)")
+        return self.distributed.add_locality(timeout=timeout)
 
     def kill_locality(self, rank: Optional[int] = None) -> Optional[int]:
         """Failure drill: SIGKILL a worker locality (the highest-ranked
@@ -599,6 +653,13 @@ class Session:
                       f"{dstats['bytes_sent']}B out / "
                       f"{dstats['bytes_recv']}B in "
                       f"ckpt-leaf-wire {dstats['ckpt_leaf_wire_bytes']}B")
+                if self.plan.elastic:
+                    print(f"[train] elastic: joined "
+                          f"{dstats['joined_localities']} stolen "
+                          f"{dstats['stolen_tasks']} migrated "
+                          f"{dstats['migrated_objects']} objects "
+                          f"(membership gen "
+                          f"{dstats['membership_gen']})")
             if ckpt is not None and ckpt.aborted_saves:
                 print(f"[train] WARNING: {ckpt.aborted_saves} SPMD "
                       f"save(s) aborted with a lost writer; the last "

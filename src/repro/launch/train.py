@@ -28,6 +28,13 @@ Data parallelism over our own fabric (DESIGN.md §11):
     error feedback (~1/31 of fp32 bytes), and the exact payload count
     is printed as the report's `grad-wire` line.
 
+Elastic scale-out (DESIGN.md §13):
+  * --elastic (optionally --elastic-port P) starts an elastic driver:
+    it prints its join address and accepts new localities mid-run;
+  * --join HOST:PORT turns THIS invocation into a dial-in locality of
+    that driver instead of a training run: it registers, steals host
+    tasks the moment it is idle, and exits when the driver's run ends.
+
 Example:
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --tiny \
       --steps 30 --batch 8 --seq 64 --strategy phylanx --ckpt /tmp/ck
@@ -35,22 +42,78 @@ Example:
 from __future__ import annotations
 
 import argparse
+import json
 
 from repro.core.steps import Strategy
 from repro.frontend import cli_args, plan_from_args
 
 
+class _StallHook:
+    """Driver-side 250 ms stall at one step: the joined locality drains
+    its queue, goes hungry, and the next steerable prefetch build is
+    diverted to it - the deterministic steal window the churn tests and
+    ``benchmarks/elastic_scaleout.py`` use (DESIGN.md §13)."""
+
+    def __init__(self, at: int):
+        self.at = at
+
+    def on_step(self, it, metrics):
+        if it == self.at:
+            import time
+            time.sleep(0.25)
+
+
 def run(args) -> dict:
+    if getattr(args, "join", None):
+        # this process is a dial-in locality, not a training driver
+        from repro.distrib import join_locality
+        host, _, port = args.join.rpartition(":")
+        rank = join_locality((host or "127.0.0.1", int(port)))
+        print(f"[train] served as elastic locality {rank}; driver run "
+              f"ended", flush=True)
+        return {"joined_as": rank}
     strategy = Strategy(name=args.strategy, grad_accum=args.grad_accum,
                         sequence_parallel=args.seq_parallel)
     plan = plan_from_args(args, strategy=strategy, remat=args.remat)
     with plan.compile() as session:
-        return session.train(
-            steps=args.steps, ckpt_dir=args.ckpt, ckpt_every=args.ckpt_every,
+        if session.join_address is not None:
+            host, port = session.join_address
+            print(f"[train] elastic: accepting --join {host}:{port}",
+                  flush=True)
+        if getattr(args, "expect_joins", 0):
+            # drill determinism: a --join dialer pays its own Python/JAX
+            # startup, so hold the train loop until it is a member -
+            # otherwise a fast driver finishes before the dial lands
+            import time as _time
+            deadline = _time.monotonic() + 180.0
+            while (session.distributed.stats()["joined_localities"]
+                   < args.expect_joins):
+                if _time.monotonic() > deadline:
+                    raise TimeoutError(
+                        f"expected {args.expect_joins} --join dial-in(s) "
+                        f"within 180s")
+                _time.sleep(0.1)
+            print(f"[train] elastic: {args.expect_joins} dial-in(s) "
+                  f"joined; training", flush=True)
+        hooks = None
+        if getattr(args, "stall_at_step", None) is not None:
+            hooks = _StallHook(args.stall_at_step)
+        out = session.train(
+            steps=args.steps, hooks=hooks,
+            ckpt_dir=args.ckpt, ckpt_every=args.ckpt_every,
             log_every=args.log_every, resume=args.resume,
             fail_at_step=args.fail_at_step,
             kill_locality_at_step=args.kill_locality_at_step,
             resilience=args.resilience)
+    if getattr(args, "stats_out", None):
+        # machine-readable summary for drills/CI: loss trajectory plus
+        # the distributed counters (stolen_tasks, migrated_objects...)
+        with open(args.stats_out, "w") as f:
+            json.dump({"final_loss": out["final_loss"],
+                       "losses": out["losses"], "step": out["step"],
+                       "distributed": out["runtime_stats"].get(
+                           "distributed")}, f, indent=2)
+    return out
 
 
 def parser() -> argparse.ArgumentParser:
@@ -71,6 +134,23 @@ def parser() -> argparse.ArgumentParser:
                          "(needs --localities > 1); training must survive")
     ap.add_argument("--resilience", default="none",
                     choices=["none", "replay", "replicate"])
+    ap.add_argument("--join", default=None, metavar="HOST:PORT",
+                    help="join a running --elastic driver as an extra "
+                         "locality instead of training (all other flags "
+                         "are ignored; the driver ships its config)")
+    ap.add_argument("--stats-out", dest="stats_out", default=None,
+                    metavar="FILE",
+                    help="write a JSON summary (losses + distributed "
+                         "counters) here after training")
+    ap.add_argument("--expect-joins", dest="expect_joins", type=int,
+                    default=0, metavar="N",
+                    help="drill (needs --elastic): wait for N --join "
+                         "dial-ins before the first step so the joiner "
+                         "is a member for the whole run")
+    ap.add_argument("--stall-at-step", dest="stall_at_step", type=int,
+                    default=None, metavar="K",
+                    help="drill: sleep 250 ms on the driver at step K - "
+                         "the deterministic work-steal window")
     return ap
 
 

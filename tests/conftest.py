@@ -14,7 +14,8 @@ TIERS = ("fast", "multiproc", "spmd")
 
 # file -> tier for suites whose every test belongs to one tier; files can
 # also mark themselves (tests/test_spmd.py sets `pytestmark`)
-_FILE_TIERS = {"test_distrib.py": "multiproc"}
+_FILE_TIERS = {"test_distrib.py": "multiproc",
+               "test_elastic.py": "multiproc"}
 
 
 def pytest_configure(config):

@@ -35,7 +35,8 @@ def test_rule_catalogue_ids_are_stable():
     assert sorted(lint_mod.STATIC_RULES) == [
         "PHY001", "PHY002", "PHY003", "PHY004", "PHY005", "PHY006"]
     assert sorted(sanitize.DYNAMIC_RULES) == [
-        "PHY101", "PHY102", "PHY103", "PHY104", "PHY105"]
+        "PHY101", "PHY102", "PHY103", "PHY104", "PHY105",
+        "PHY106", "PHY107"]
 
 
 def test_seeded_cycle_is_exactly_phy001():
@@ -137,6 +138,7 @@ def test_phylint_cli_strict_is_clean_and_lists_rules():
         [sys.executable, str(root / "tools" / "phylint.py"), "--list-rules"],
         capture_output=True, text=True, timeout=120)
     assert "PHY001" in rules.stdout and "PHY105" in rules.stdout
+    assert "PHY106" in rules.stdout and "PHY107" in rules.stdout
 
 
 def test_multi_locality_standard_train_trace_refuses():
@@ -289,7 +291,70 @@ def test_agas_fetch_after_free_and_bad_free_are_phy105():
     assert any("fetch after free" in m for m in kinds)
     assert any("never-registered" in m for m in kinds)
     assert d.audit() == {"live": 0, "puts": 1, "local_fetches": 1,
-                         "frees": 1}
+                         "frees": 1, "migrated": 0, "forwarded_fetches": 0}
+
+
+def test_double_spawn_same_tid_is_phy106():
+    """Seeded steal-lease violation: the same tid lands on one locality
+    twice (a lease raced a re-spawn past the driver's fencing) - the
+    duplicate must be dropped and flagged, never run twice."""
+    from repro.core.futures import Lane
+    from repro.distrib.messaging import Endpoint
+    from repro.distrib.runtime import Locality
+
+    drv = Endpoint(0)
+    drv.register("task_done", lambda src, msg: None)
+    loc = Locality(7, world=2)
+    try:
+        loc.endpoint.connect(0, drv.address)
+        payload = {"tid": "t0", "name": "dup", "lane": int(Lane.COMPUTE),
+                   "pin": False, "gen": 0, "fn": sorted,
+                   "args": ([3, 1, 2],), "kwargs": {}}
+        with sanitize.enabled():
+            loc._on_spawn(0, dict(payload))
+            loc._on_spawn(0, dict(payload))      # the violation
+            diags = sanitize.get().diagnostics("PHY106")
+        assert len(diags) == 1 and "spawned here twice" in diags[0].message
+    finally:
+        loc.graph.shutdown(wait=True, cancel_pending=True)
+        loc.endpoint.close()
+        drv.close()
+
+
+def test_stale_generation_steal_request_is_phy106():
+    """Seeded membership-generation fence: a steal_request planned under
+    a stale peer table is refused with ``stale`` (and the current
+    generation to re-sync from), never handed a task."""
+    from repro.distrib.runtime import DistributedGraph
+
+    g = DistributedGraph(localities=1, elastic=True)
+    try:
+        g.group.gen = 3
+        with sanitize.enabled():
+            out = g._on_steal_request(5, {"thief": 5, "gen": 1})
+            diags = sanitize.get().diagnostics("PHY106")
+        assert out["stale"] and out["handed"] == 0 and out["gen"] == 3
+        assert len(diags) == 1 and "stale membership generation" \
+            in diags[0].message
+    finally:
+        g.shutdown()
+
+
+def test_dead_forwarding_stub_deref_is_phy107():
+    """Seeded dead-stub chase: a forwarding stub whose migrated target
+    is gone (freed, or its locality died) must raise AND be flagged."""
+    from repro.distrib.agas import ObjectDirectory, RemoteRef, _Forward
+
+    d = ObjectDirectory(rank=0)
+    ref = d.put({"w": 1}, summary="weights")
+    # seed the defect: the value "migrated" but its new home is gone
+    d._store[ref.gid[1]] = _Forward(ref=RemoteRef(gid=(0, 999)))
+    with sanitize.enabled():
+        with pytest.raises(KeyError):
+            d.fetch(ref)
+        diags = sanitize.get().diagnostics("PHY107")
+    assert len(diags) == 1 and "forwarding stub" in diags[0].message
+    assert d.audit()["forwarded_fetches"] == 1
 
 
 def test_ring_generation_regression_is_phy103():

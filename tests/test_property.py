@@ -8,6 +8,7 @@ falls back to ``tests/_property_fallback.py`` - a deterministic seeded
 N-example runner over the same strategies - otherwise, so this suite
 NEVER silently skips."""
 import tempfile
+import time
 from pathlib import Path
 
 import jax.numpy as jnp
@@ -324,3 +325,196 @@ def test_quantize_bucket_error_feedback_invariant(rows, seed):
     deq = np.asarray(compression.dequantize_bucket(packed, scale, n))
     np.testing.assert_allclose(deq + np.asarray(e2).ravel(),
                                g + np.asarray(e).ravel(), atol=1e-5)
+
+
+# -- elastic membership (DESIGN.md §13) ---------------------------------------
+
+@given(n=st.integers(0, 120), owner=st.integers(0, 3),
+       n_new=st.integers(1, 4), seed=st.integers(0, 999))
+def test_rebalance_plan_is_total_contiguous_balanced(n, owner, n_new, seed):
+    """AGAS rebalance math: moved blocks are drawn from the owner's
+    sorted live indices without loss or duplication, the owner keeps a
+    PREFIX, every newcomer's block is contiguous, block sizes are
+    balanced (spread <= 1), and with enough objects every newcomer
+    adopts something."""
+    from repro.distrib import rebalance_plan
+    rng = np.random.default_rng(seed)
+    indices = [int(i) for i in rng.choice(6 * n + 6, size=n, replace=False)]
+    newcomers = [owner + 1 + i for i in range(n_new)]
+    plan = rebalance_plan(indices, owner, newcomers)
+    srt = sorted(indices)
+    pos = {idx: k for k, idx in enumerate(srt)}
+    moved = [i for blk in plan.values() for i in blk]
+    assert set(plan) <= set(newcomers)
+    assert len(moved) == len(set(moved))                  # no dup moves
+    assert set(moved) <= set(indices)                     # no inventions
+    kept = [i for i in srt if i not in set(moved)]
+    assert kept == srt[:len(kept)]                        # owner keeps prefix
+    for blk in plan.values():
+        ps = [pos[i] for i in blk]
+        assert ps == list(range(ps[0], ps[0] + len(ps)))  # contiguous block
+    sizes = [len(kept)] + [len(b) for b in plan.values()]
+    if n >= n_new + 1:
+        assert max(sizes) - min(sizes) <= 1               # balanced
+        assert set(plan) == set(newcomers)                # everyone adopts
+    assert len(kept) + len(moved) == n                    # total partition
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 12), seed=st.integers(0, 999))
+def test_forwarding_stub_deref_equals_direct_deref(n, seed):
+    """Migration transparency: after ``rebalance`` moves a block to a
+    newcomer, every STALE ref fetched through its forwarding stub
+    yields exactly the value a direct (pre-migration) deref did."""
+    from repro.distrib import ObjectDirectory
+    from repro.distrib.messaging import Endpoint
+    a, b = Endpoint(0), Endpoint(1)
+    try:
+        da, db = ObjectDirectory(0, a), ObjectDirectory(1, b)
+        a.address_book[1] = b.address
+        b.address_book[0] = a.address
+        rng = np.random.default_rng(seed)
+        vals = [rng.standard_normal((3,)).astype(np.float32)
+                for _ in range(n)]
+        refs = [da.put(v, summary=f"v{i}") for i, v in enumerate(vals)]
+        direct = [np.asarray(da.fetch(r)) for r in refs]
+        moved = da.rebalance([1])
+        assert moved == n - (n + 1) // 2          # owner keeps first block
+        assert len(db) == moved                   # newcomer adopted them
+        for ref, before in zip(refs, direct):
+            np.testing.assert_array_equal(np.asarray(da.fetch(ref)), before)
+        aud = da.audit()
+        assert aud["migrated"] == moved
+        assert aud["forwarded_fetches"] == moved  # one chase per moved gid
+    finally:
+        a.close()
+        b.close()
+
+
+def _echo(x):
+    return x
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10 ** 6))
+def test_steal_protocol_exactly_once_under_seeded_churn(seed):
+    """Driver-side exactly-once invariant under seeded interleavings of
+    join / steal / kill / complete events: at every point each task id
+    is held by AT MOST ONE live locality (no double spawn), every task
+    executes exactly once, and every future resolves with its task's
+    value.  Workers are simulated faithfully in-process: a spawn lands
+    in a queue, a lease pops before the handoff (the victim's cancel),
+    a dead rank's queue dies with it."""
+    import random as _random
+    from repro.distrib import DistributedGraph
+    from repro.distrib.messaging import PeerLostError
+
+    rng = _random.Random(seed)
+    g = DistributedGraph(localities=1, elastic=True, name="churn-sim")
+    try:
+        queues: dict[int, dict] = {1: {}, 2: {}}   # rank -> {tid: spawn}
+        dead: set = set()
+        pending_handoffs: list = []                # delayed lease releases
+
+        def fake_post(rank, action, payload=None):
+            if rank in dead:
+                raise PeerLostError(f"locality {rank} is dead (sim)")
+            if action == "spawn" and rank in queues:
+                tid = payload["tid"]
+                # the worker-side dup drop (PHY106 seam): landing one
+                # tid twice at one locality would double-execute
+                assert tid not in queues[rank], \
+                    f"task {tid} spawned twice at locality {rank}"
+                queues[rank][tid] = payload
+
+        g.endpoint.post = fake_post
+        with g.group._cond:
+            g.group._alive.update(queues)
+
+        executed: dict = {}                        # tid -> value run with
+
+        def holders(tid):
+            return [r for r, q in queues.items()
+                    if r not in dead and tid in q]
+
+        def run_one():
+            ranks = [r for r, q in queues.items() if r not in dead and q]
+            if not ranks:
+                return
+            r = rng.choice(ranks)
+            tid = rng.choice(sorted(queues[r]))
+            p = queues[r].pop(tid)
+            assert tid not in executed, f"{tid} executed twice"
+            executed[tid] = p["args"][0]
+            g._on_task_done(r, {"tid": tid, "status": "ok",
+                                "value": p["args"][0]})
+
+        def steal_once(force_current_gen=False):
+            alive = [r for r in g.group.alive_workers() if r not in dead]
+            if not alive:
+                return
+            thief = rng.choice(alive)
+            gen = g.group.gen
+            if not force_current_gen and rng.random() < 0.2:
+                gen -= 1                           # stale membership view
+            out = g._on_steal_request(thief, {"thief": thief, "gen": gen})
+            victim = out.get("leased")
+            if victim is None or victim in dead:
+                return
+            stealable = [t for t, p in queues[victim].items()
+                         if p.get("steal")]
+            if not stealable:
+                return
+            tid = rng.choice(stealable)
+            queues[victim].pop(tid)                # the victim's cancel
+            handoff = (victim, {"tid": tid, "thief": thief,
+                                "victim": victim, "gen": out["gen"]})
+            if rng.random() < 0.4:
+                pending_handoffs.append(handoff)   # delivered later
+            else:
+                g._on_steal_handoff(*handoff)
+
+        def kill_one():
+            alive = [r for r in g.group.alive_workers() if r not in dead]
+            if len(alive) < 2:
+                return
+            r = rng.choice(alive)
+            dead.add(r)
+            queues[r].clear()                      # its queue dies with it
+            g._on_peer_lost(r)
+
+        def join_one():
+            # protocol-level join: a new rank becomes dispatchable and
+            # the membership generation moves (fencing in-flight steals)
+            r = max(queues) + 1
+            queues[r] = {}
+            with g.group._cond:
+                g.group._alive.add(r)
+            with g._lock:
+                g.group.gen += 1
+
+        N = 12
+        futs = [g.defer(_echo, i, name=f"c{i}") for i in range(N)]
+        deadline = time.time() + 30
+        while time.time() < deadline and \
+                sum(len(q) for q in queues.values()) < N:
+            time.sleep(0.005)                      # dispatch nodes land
+        assert sum(len(q) for q in queues.values()) == N
+
+        events = [run_one] * 4 + [steal_once, kill_one, join_one]
+        for _ in range(rng.randint(10, 40)):
+            rng.choice(events)()
+            for i in range(N):                     # the core invariant
+                assert len(holders(f"t{i}")) <= 1
+        deadline = time.time() + 30
+        while g._outstanding and time.time() < deadline:
+            while pending_handoffs:                # late lease releases:
+                g._on_steal_handoff(*pending_handoffs.pop())  # fenced or
+            run_one()                              # re-spawned, never lost
+            steal_once(force_current_gen=True)
+        assert not g._outstanding, f"stranded tasks: {list(g._outstanding)}"
+        for i, f in enumerate(futs):
+            assert f.result(timeout=10) == i
+        assert all(v == int(t[1:]) for t, v in executed.items())
+    finally:
+        g.shutdown()

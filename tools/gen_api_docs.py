@@ -39,7 +39,7 @@ API = [
         "Plan", "Plan.compile",
         "Session", "Session.train", "Session.serve", "Session.dryrun",
         "Session.close", "Session.stats", "Session.kill_locality",
-        "Session.lint",
+        "Session.add_locality", "Session.lint",
         "futurize", "tracing", "Trace",
     ]),
     ("repro.analysis.lint", [
@@ -61,9 +61,12 @@ API = [
     ("repro.distrib", [
         "Endpoint", "Endpoint.register", "Endpoint.connect",
         "Endpoint.request", "Endpoint.post", "Endpoint.close",
+        "raw_request",
         "ObjectDirectory", "ObjectDirectory.put", "ObjectDirectory.fetch",
-        "ObjectDirectory.free", "RemoteRef",
+        "ObjectDirectory.free", "ObjectDirectory.rebalance",
+        "ObjectDirectory.audit", "RemoteRef", "rebalance_plan",
         "DistributedGraph", "DistributedGraph.defer",
+        "DistributedGraph.add_locality", "DistributedGraph.rebalance",
         "DistributedGraph.replicate", "DistributedGraph.cancel",
         "DistributedGraph.fetch", "DistributedGraph.stats",
         "DistributedGraph.remote_stats", "DistributedGraph.barrier",
@@ -74,7 +77,8 @@ API = [
         "DistributedGraph.ddp_train", "DistributedGraph.wait_ddp_done",
         "DistributedGraph.ddp_abort",
         "DistributedGraph.account_grad_wire_bytes",
-        "Locality", "LocalityGroup", "LocalityGroup.kill", "worker_main",
+        "Locality", "LocalityGroup", "LocalityGroup.kill",
+        "LocalityGroup.add_worker", "worker_main", "join_locality",
     ]),
     ("repro.distrib.collectives", [
         "GradCodec", "GradCodec.reset", "GradCodec.encode",
