@@ -1,0 +1,171 @@
+"""Serving gateway latency: per-token p50/p95, queue-wait and end-to-end
+request percentiles, plus admission/paged-cache accounting (DESIGN.md
+§14).
+
+Three cells over the same request load:
+
+  * ``wave``       - the fixed-wave baseline (``Session.serve``): slots
+    prefill/decode in lockstep, idle slots padded.
+  * ``stream``     - the gateway (``Session.serve_stream``), every
+    request arriving at round 0.
+  * ``stream-mid`` - the gateway with staggered mid-flight arrivals
+    (requests > slots), the shape the paged cache exists for.
+
+Percentiles come from the run's own ``request_latency_hist`` (the
+histograms ``RuntimeStats`` already ships) via linear interpolation
+inside the hit bucket - the benchmark consumes exactly what production
+stats expose.  The paged-cache accounting is re-asserted here outside
+pytest: every refill must be a page hit, the prefill-recompute fallback
+must never run, and every page must be reclaimed - any mismatch fails
+the benchmark.
+
+Writes the versioned ``BENCH_serve_latency.json`` (repo root; commit it
+when regenerating on a reference machine):
+
+  PYTHONPATH=src python -m benchmarks.serve_latency            # full
+  PYTHONPATH=src python -m benchmarks.serve_latency --smoke    # CI
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.frontend.plan import Plan
+
+VERSION = 1
+PHASES = ("queue_wait", "prefill", "decode_token", "total")
+
+
+def hist_quantile(edges_s, counts, q):
+    """Approximate the ``q``-quantile (seconds) of a bucketed histogram
+    by linear interpolation inside the hit bucket (the final unbounded
+    bucket interpolates up to 10x the last edge)."""
+    total = sum(counts)
+    if total == 0:
+        return None
+    target = q * total
+    lo, cum = 0.0, 0
+    bounds = list(edges_s) + [edges_s[-1] * 10]
+    for hi, c in zip(bounds, counts):
+        if c and cum + c >= target:
+            return lo + (hi - lo) * (target - cum) / c
+        cum += c
+        lo = hi
+    return bounds[-1]
+
+
+def _percentiles(stats_json):
+    hist = stats_json["request_latency_hist"]
+    edges = hist["edges_s"]
+    out = {}
+    for phase in PHASES:
+        counts = hist["counts"][phase]
+        for q in (0.50, 0.95):
+            v = hist_quantile(edges, counts, q)
+            out[f"{phase}_p{int(q * 100)}_ms"] = \
+                None if v is None else round(1e3 * v, 4)
+        out[f"{phase}_n"] = sum(counts)
+    return out
+
+
+def _assert_paging(out):
+    serve = out["runtime_stats"]["serve"]
+    cache = out["cache"]
+    if serve.get("refills", 0) != serve.get("page_hits", 0):
+        raise AssertionError(f"refill accounting broke: "
+                             f"{serve.get('page_hits', 0)} page hits != "
+                             f"{serve.get('refills', 0)} refills")
+    if serve.get("prefill_recompute", 0) != 0:
+        raise AssertionError("prefill recompute fallback ran "
+                             f"{serve['prefill_recompute']}x")
+    if cache["pages_live"] != 0 or cache["cache_entries"] != 0:
+        raise AssertionError(f"pages leaked: {cache}")
+
+
+def run_cells(*, requests: int, slots: int, prompt_len: int, gen_len: int
+              ) -> list[dict]:
+    plan = Plan(arch="qwen2.5-3b", tiny=True, seed=0)
+    results = []
+
+    with plan.compile() as session:
+        wave = session.serve(requests=requests, slots=slots,
+                             prompt_len=prompt_len, gen_len=gen_len,
+                             verbose=False)
+    results.append({"cell": "wave", "tokens": wave["tokens"],
+                    "padded_tokens": wave["padded_tokens"],
+                    "tokens_per_s": round(wave["tokens_per_s"], 2)})
+
+    # staggered arrivals land a new request every other decode round
+    stream_cells = [
+        ("stream", [{"at_round": 0} for _ in range(requests)]),
+        ("stream-mid", [{"at_round": 2 * (i // slots)}
+                        for i in range(requests)]),
+    ]
+    for name, trace in stream_cells:
+        with plan.compile() as session:
+            out = session.serve_stream(trace=trace, prompt_len=prompt_len,
+                                       gen_len=gen_len, slots=slots,
+                                       verbose=False)
+        _assert_paging(out)
+        serve = out["runtime_stats"]["serve"]
+        cell = {"cell": name, "tokens": out["tokens"],
+                "padded_tokens": out["padded_tokens"],
+                "tokens_per_s": round(out["tokens_per_s"], 2),
+                "epochs": out["epochs"], "rounds": out["rounds"],
+                "admission": {
+                    "submitted": out["requests"],
+                    "admitted": serve.get("admitted", 0),
+                    "completed": out["completed"],
+                    "cancelled": out["cancelled"],
+                    "expired": out["expired"],
+                    "failed": out["failed"],
+                    "rejected": out["rejected"]},
+                "cache": out["cache"]}
+        cell.update(_percentiles(out["runtime_stats"]))
+        results.append(cell)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI sizes (6 requests, 2 slots, gen 4)")
+    ap.add_argument("--out", default=str(Path(__file__).resolve()
+                                         .parent.parent
+                                         / "BENCH_serve_latency.json"))
+    args = ap.parse_args()
+    if args.smoke:
+        args.requests, args.slots = 6, 2
+        args.prompt_len, args.gen_len = 16, 4
+
+    results = run_cells(requests=args.requests, slots=args.slots,
+                        prompt_len=args.prompt_len, gen_len=args.gen_len)
+    print(f"{'cell':>10s} {'tok/s':>8s} {'tok p50ms':>10s} "
+          f"{'tok p95ms':>10s} {'e2e p95ms':>10s} {'done':>5s}")
+    for r in results:
+        if r["cell"] == "wave":
+            print(f"{r['cell']:>10s} {r['tokens_per_s']:8.1f} "
+                  f"{'-':>10s} {'-':>10s} {'-':>10s} {'-':>5s}")
+        else:
+            print(f"{r['cell']:>10s} {r['tokens_per_s']:8.1f} "
+                  f"{r['decode_token_p50_ms']:10.2f} "
+                  f"{r['decode_token_p95_ms']:10.2f} "
+                  f"{r['total_p95_ms']:10.2f} "
+                  f"{r['admission']['completed']:5d}", flush=True)
+
+    doc = {"bench": "serve_latency", "version": VERSION,
+           "arch": "qwen2.5-3b", "tiny": True,
+           "requests": args.requests, "slots": args.slots,
+           "prompt_len": args.prompt_len, "gen_len": args.gen_len,
+           "smoke": bool(args.smoke), "results": results}
+    Path(args.out).write_text(json.dumps(doc, indent=2) + "\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

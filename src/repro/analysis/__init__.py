@@ -29,6 +29,7 @@ _LAZY = {
     "LintGraph": "lint",
     "LintNode": "lint",
     "STATIC_RULES": "lint",
+    "gateway_trace": "trace_builders",
     "plan_traces": "trace_builders",
     "serve_trace": "trace_builders",
     "step_contract": "trace_builders",

@@ -149,6 +149,107 @@ def serve_trace(
     return g
 
 
+def gateway_trace(
+    plan,
+    *,
+    requests: int = 6,
+    gen_len: int = 4,
+    slots: int = 2,
+    max_inflight: int | None = None,
+    arrivals: list[int] | None = None,
+) -> LintGraph:
+    """The driver-side tree of ``Session.serve_stream`` (the gateway,
+    DESIGN.md §14) for a fault-free arrival script.
+
+    Mirrors ``frontend/gateway.py``'s round loop exactly: per request a
+    producer-backed ``request:r{i}`` promise, a PREFETCH ``stack:r{i}``
+    and a ``prefill:r{i}``; per slot-membership epoch a ``refill:e{k}``
+    joining the previous decode tail with the joiners' prefills; per
+    round a ``decode:e{k}:t{j}`` with a chained CHECKPOINT
+    ``emit:e{k}:t{j}``; and a forced ``finish:r{i}`` hanging off the emit
+    that carried the request's last token.
+
+    Args:
+        arrivals: per-request arrival round (submission order); defaults
+            to everyone at round 0.  Deadlines/faults are runtime-only -
+            lint those via ``LintGraph.from_trace``.
+    """
+    if getattr(plan, "localities", 1) > 1:
+        raise ValueError(
+            "gateway_trace mirrors the single-locality driver tree; lint a "
+            "multi-locality run via LintGraph.from_trace / from_graph"
+        )
+    g = LintGraph(label=f"gateway[{getattr(plan, 'arch', '?')}]")
+    g.has_forced_info = True
+    arrivals = list(arrivals) if arrivals is not None else [0] * requests
+    if not arrivals:
+        return g
+    cap = max(1, max_inflight if max_inflight is not None else 2 * slots)
+    queued = list(enumerate(arrivals))      # (rid index, at_round), FIFO
+    pending: list[int] = []
+    admitted: list[int] = []
+    residents: list[int | None] = [None] * slots
+    emitted = {i: 0 for i, _ in queued}
+    prefill_of: dict[int, int] = {}
+    carry: int | None = None
+    prev_emit: int | None = None
+    epoch, round_, j = -1, 0, 0
+    while True:
+        for i, at in [q for q in queued if q[1] <= round_]:
+            queued.remove((i, at))
+            g.add(f"request:r{i}", lane="CHECKPOINT", kind="promise",
+                  producer="gateway", src="Gateway._register")
+            pending.append(i)
+        while pending and (len(admitted)
+                           + sum(r is not None for r in residents)) < cap:
+            i = pending.pop(0)
+            s = g.add(f"stack:r{i}", lane="PREFETCH", src="Gateway._admit")
+            prefill_of[i] = g.add(f"prefill:r{i}", deps=[s],
+                                  src="Gateway._admit")
+            admitted.append(i)
+        changed = False
+        for s, i in enumerate(residents):
+            if i is not None and emitted[i] >= gen_len:
+                g.add(f"finish:r{i}", lane="CHECKPOINT", deps=[prev_emit],
+                      forced=True, src="Gateway run drain")
+                residents[s] = None
+                changed = True
+        joiners: list[int] = []
+        free = [s for s in range(slots) if residents[s] is None]
+        while free and admitted:
+            i = admitted.pop(0)
+            residents[free.pop(0)] = i
+            joiners.append(i)
+            changed = True
+        if all(r is None for r in residents):
+            nxt = min((at for _, at in queued), default=None)
+            if nxt is not None:
+                round_ = max(round_ + 1, nxt)
+                continue
+            break
+        if changed or carry is None:
+            epoch += 1
+            j = 0
+            # the live trace records dependency edges index-sorted
+            deps = sorted(([] if carry is None else [carry])
+                          + [prefill_of[i] for i in joiners])
+            carry = g.add(f"refill:e{epoch}", deps=deps,
+                          src="Gateway._refill_fn")
+        carry = g.add(f"decode:e{epoch}:t{j}", deps=[carry],
+                      src="Gateway._decode_fn")
+        emit_deps = ([] if prev_emit is None else [prev_emit]) + [carry]
+        prev_emit = g.add(f"emit:e{epoch}:t{j}", lane="CHECKPOINT",
+                          deps=emit_deps, src="Gateway._emit_fn")
+        for i in residents:
+            if i is not None:
+                emitted[i] += 1
+        j += 1
+        round_ += 1
+    if prev_emit is not None:
+        g.mark_forced(prev_emit)    # run() drains through the tail emit
+    return g
+
+
 def step_contract(plan, *, steps: int = 4, ckpt_every: int = 2) -> LintGraph:
     """The device-step donation contract as a lintable buffer-version graph.
 
@@ -205,6 +306,7 @@ def plan_traces(plan, *, steps: int = 6, requests: int = 8, gen_len: int = 4, sl
     }
     if not getattr(plan, "ddp", False) and not getattr(plan, "spmd", False):
         out["serve"] = serve_trace(plan, requests=requests, gen_len=gen_len, slots=slots)
+        out["gateway"] = gateway_trace(plan, requests=requests, gen_len=gen_len, slots=slots)
     return out
 
 

@@ -7,8 +7,11 @@ Modules:
   fusion       - tensor fusion (capped collective buckets)
   granularity  - runtime-adaptive grain-size policy
   futures      - host-side futurized execution / in-flight step pipeline
+  paging       - page-pool allocator + paged per-request inference cache
   resilience   - replay / replicate+consensus / checksums
   overlap      - communication/computation overlap strategies (DP schedules)
   steps        - train/prefill/decode step builders
 """
-from . import sharding, fusion, collectives, granularity, futures, resilience  # noqa: F401
+from . import (  # noqa: F401
+    sharding, fusion, collectives, granularity, futures, paging, resilience,
+)

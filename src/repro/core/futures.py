@@ -57,7 +57,8 @@ from ..analysis import sanitize as _san
 
 __all__ = [
     "CancelledError", "FuturizedGraph", "HIST_EDGES_S", "InFlight", "Lane",
-    "PhyFuture", "Pipeline", "RuntimeStats", "TaskState", "hist_labels",
+    "PhyFuture", "Pipeline", "REQUEST_PHASES", "RuntimeStats", "TaskState",
+    "hist_labels",
 ]
 
 
@@ -87,6 +88,11 @@ _TERMINAL = (TaskState.DONE, TaskState.ERROR, TaskState.CANCELLED)
 # wall-time histogram bucket edges (seconds): tasks land in the first
 # bucket whose edge exceeds their duration; the last bucket is open-ended
 HIST_EDGES_S = (1e-4, 1e-3, 1e-2, 1e-1, 1.0)
+
+# per-request latency phases the serving gateway histograms (same bucket
+# edges as the lane histograms): time queued before prefill started, the
+# prefill itself, each decoded token, and submit->finish end to end
+REQUEST_PHASES = ("queue_wait", "prefill", "decode_token", "total")
 
 
 def _fmt_s(s: float) -> str:
@@ -120,7 +126,16 @@ class RuntimeStats:
             "labels": ["<100us", "<1ms", "<10ms", "<100ms", "<1s", ">=1s"],
             "counts": {lane: [int] * 6},  # counts[i] tasks in labels[i]
           },
+          "serve": {counter: int},       # gateway admission/cache counters
+          "request_latency_hist": {      # per-request phases, same buckets
+            "edges_s": [...], "labels": [...],
+            "counts": {phase: [int] * 6},   # phase in REQUEST_PHASES
+          },
         }
+
+    ``serve`` and ``request_latency_hist`` are fed by the serving gateway
+    (``frontend/gateway.py``) through ``FuturizedGraph.record_serve``;
+    both serialize as all-zeros for graphs that never serve.
 
     A task of duration ``d`` lands in the first bucket whose edge exceeds
     ``d``; the last bucket is open-ended.  For scheduler-run tasks the
@@ -142,10 +157,23 @@ class RuntimeStats:
     lane_hist: dict = dataclasses.field(
         default_factory=lambda: {lane.name: [0] * (len(HIST_EDGES_S) + 1)
                                  for lane in Lane})
+    # serving-gateway counters (admitted/rejected/expired/..., paged-cache
+    # hits, padded-slot tokens); open-keyed so the gateway can grow them
+    serve: dict = dataclasses.field(default_factory=dict)
+    # per-request latency, histogrammed by phase over HIST_EDGES_S buckets
+    request_hist: dict = dataclasses.field(
+        default_factory=lambda: {p: [0] * (len(HIST_EDGES_S) + 1)
+                                 for p in REQUEST_PHASES})
 
     def record_task(self, lane: "Lane", dt_s: float):
         self.lane_hist[lane.name][bisect.bisect_right(HIST_EDGES_S,
                                                       dt_s)] += 1
+
+    def record_request_phase(self, phase: str, dt_s: float):
+        """One request-latency sample: ``phase`` must be in
+        ``REQUEST_PHASES``; ``dt_s`` buckets exactly like ``record_task``."""
+        self.request_hist[phase][bisect.bisect_right(HIST_EDGES_S,
+                                                     dt_s)] += 1
 
     def hist_lines(self) -> list[str]:
         """Human-readable per-lane wall-time histograms (non-empty lanes)."""
@@ -168,6 +196,10 @@ class RuntimeStats:
         out["lane_time_hist"] = {"edges_s": list(HIST_EDGES_S),
                                  "labels": hist_labels(),
                                  "counts": hist}
+        req = out.pop("request_hist")
+        out["request_latency_hist"] = {"edges_s": list(HIST_EDGES_S),
+                                       "labels": hist_labels(),
+                                       "counts": req}
         return out
 
 
@@ -621,7 +653,22 @@ class FuturizedGraph:
             return dataclasses.replace(
                 self._stats, per_lane=dict(self._stats.per_lane),
                 lane_hist={k: list(v)
-                           for k, v in self._stats.lane_hist.items()})
+                           for k, v in self._stats.lane_hist.items()},
+                serve=dict(self._stats.serve),
+                request_hist={k: list(v)
+                              for k, v in self._stats.request_hist.items()})
+
+    def record_serve(self, *, phase: Optional[str] = None, dt_s: float = 0.0,
+                     **counters: int):
+        """Serving-gateway telemetry sink: bump ``stats().serve`` counters
+        by the given keyword amounts and, when ``phase`` is set (one of
+        ``REQUEST_PHASES``), add one ``dt_s`` sample to that per-request
+        latency histogram.  Thread-safe; callable from node bodies."""
+        with self._lock:
+            if phase is not None:
+                self._stats.record_request_phase(phase, dt_s)
+            for k, v in counters.items():
+                self._stats.serve[k] = self._stats.serve.get(k, 0) + int(v)
 
     def load(self) -> dict[str, int]:
         """Instantaneous queue pressure: ``{"ready": n, "running": n,

@@ -1,10 +1,14 @@
 """Productivity frontend (DESIGN.md §8): the ``@futurize`` tracing
 decorator that turns plain Python into the futurized execution tree, and
 the declarative ``Plan`` -> ``Session`` API the launchers are shims over."""
-from .cli import cli_args, plan_from_args  # noqa: F401
+from .cli import cli_args, plan_from_args, serve_flags  # noqa: F401
 from .futurize import (Trace, TraceNode, current_trace,  # noqa: F401
                        futurize, tracing)
+from .gateway import (DeadlineExpired, Gateway, RequestHandle,  # noqa: F401
+                      RequestQueue, RequestRejected)
 from .plan import Plan, Session  # noqa: F401
 
-__all__ = ["Plan", "Session", "Trace", "TraceNode", "cli_args",
-           "current_trace", "futurize", "plan_from_args", "tracing"]
+__all__ = ["DeadlineExpired", "Gateway", "Plan", "RequestHandle",
+           "RequestQueue", "RequestRejected", "Session", "Trace",
+           "TraceNode", "cli_args", "current_trace", "futurize",
+           "plan_from_args", "serve_flags", "tracing"]

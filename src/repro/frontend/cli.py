@@ -9,7 +9,7 @@ from typing import Optional
 from ..configs import ARCH_IDS
 from .plan import Plan
 
-__all__ = ["cli_args", "plan_from_args"]
+__all__ = ["cli_args", "plan_from_args", "serve_flags"]
 
 
 def cli_args(ap: Optional[argparse.ArgumentParser] = None, *,
@@ -67,6 +67,30 @@ def cli_args(ap: Optional[argparse.ArgumentParser] = None, *,
         ap.add_argument("--batch", type=int, default=batch)
     if seed:
         ap.add_argument("--seed", type=int, default=0)
+    return ap
+
+
+def serve_flags(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:
+    """The serving-gateway flag block (``launch/serve.py``): opt into the
+    streamed gateway and its admission-control knobs (DESIGN.md §14)."""
+    ap.add_argument("--serve-stream", dest="serve_stream",
+                    action="store_true",
+                    help="serve through the continuous-batching gateway "
+                         "(Session.serve_stream): requests arrive "
+                         "mid-flight, prefill state parks in the paged "
+                         "inference cache, slot refill loads pages "
+                         "instead of recomputing")
+    ap.add_argument("--max-inflight", dest="max_inflight", type=int,
+                    default=None,
+                    help="admission cap on requests holding resources "
+                         "(queued-for-a-slot + decoding); default "
+                         "2 * slots")
+    ap.add_argument("--deadline-ms", dest="deadline_ms", type=float,
+                    default=None,
+                    help="per-request deadline: a request still short of "
+                         "a decode slot when it lapses expires cleanly "
+                         "(its node chain is cancelled and its pages "
+                         "reclaimed)")
     return ap
 
 

@@ -1,0 +1,579 @@
+"""Serving gateway: async continuous batching over the futurized runtime.
+
+``Session.serve`` drains a fixed request list in synchronized waves: every
+slot prefills together, decodes ``gen_len`` tokens together, and a slot
+that finishes early idles (padded) until the wave barrier.  This module is
+the serve path the paper's runtime story actually implies - requests as
+*first-class futurized node chains* arriving mid-flight, scheduled by
+constraint resolution rather than wave barriers (DESIGN.md §14):
+
+  * ``RequestQueue`` accepts arrivals while the gateway is decoding; each
+    ``submit`` returns a ``RequestHandle`` the caller can block on or
+    cancel.  Deterministic *traces* (`at_round`-tagged submissions) drive
+    the test battery; live threads drive real streams.
+  * Admission control: at most ``max_inflight`` requests hold resources
+    (queued requests wait; a full queue rejects); a request's deadline
+    expiring before it reaches a slot cancels its node chain cleanly.
+  * A request prefills ONCE, at admission, in its own ``prefill:r{i}``
+    node (batch=1); the resulting KV/conv/SSM decode state parks in the
+    paged ``core.paging.InferenceCache`` until a slot frees up.  Slot
+    refill *loads pages* (``refill:e{k}``) instead of recomputing - the
+    paged-cache hit counter equals the refill counter by construction.
+  * The continuous batch decodes with *per-slot positions* (``[B]`` pos
+    vectors through ``models``), so co-tenants at different offsets share
+    one jitted decode step.  Every decode round is a named graph node
+    (``decode:e{k}:t{j}``), its token fan-out a chained CHECKPOINT
+    ``emit`` node, and each request's completion a ``finish:r{i}`` node
+    resolving the ``request:r{i}`` promise (producer-backed, so the
+    PHY002/PHY101 linters trust it).
+
+Graph shape per request i (epoch k = one slot-membership period)::
+
+    stack:r{i} --> prefill:r{i} --\\
+    ... decode:e{k-1}:t{J} --------> refill:e{k} -> decode:e{k}:t0 -> ...
+                                          decode:e{k}:t{j} -> emit:e{k}:t{j}
+    emit chain (prev emit -> next emit) ... -> finish:r{i} => request:r{i}
+
+Token streams are *bit-identical* across co-tenancy: prefill is batch=1,
+decode math is row-independent (one-hot cache writes, per-row masks and
+argmax), so a request's stream depends only on its prompt - the property
+the fault-injection and multiproc parity tests pin down.
+"""
+from __future__ import annotations
+
+import collections
+import itertools
+import threading
+import time
+from concurrent.futures import CancelledError
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.futures import FuturizedGraph, Lane
+from ..core.paging import InferenceCache
+
+__all__ = ["DeadlineExpired", "Gateway", "RequestHandle", "RequestQueue",
+           "RequestRejected"]
+
+
+class RequestRejected(RuntimeError):
+    """Admission control refused the request (queue at capacity)."""
+
+
+class DeadlineExpired(TimeoutError):
+    """The request's deadline passed before it reached a decode slot."""
+
+
+def _stack_request(prompt):
+    """Host prep of one request's prompt (module-level: ships to a worker
+    locality by reference when the plan is multi-locality)."""
+    return np.asarray(prompt, np.int32)
+
+
+class RequestHandle:
+    """One request's client-side view: token stream, status, cancel.
+
+    Statuses: ``queued`` -> ``rejected`` | ``admitted`` -> ``active`` ->
+    ``done`` | ``cancelled`` | ``expired`` | ``failed``.  ``tokens`` is
+    the prefill token plus one token per decode round the request was
+    resident for; ``result()`` blocks for the terminal state.
+    """
+
+    def __init__(self, rid: str, prompt, *, at_round: int = 0,
+                 deadline_ms: Optional[float] = None,
+                 cancel_after: Optional[int] = None,
+                 inject: Optional[str] = None):
+        self.rid = rid
+        self.prompt = prompt
+        self.at_round = int(at_round)
+        self.deadline_s = None if deadline_ms is None else deadline_ms / 1e3
+        self.cancel_after = cancel_after
+        self.inject = inject
+        self.status = "queued"
+        self.tokens: list[int] = []
+        self.submit_t = time.perf_counter()
+        self._done = threading.Event()
+        self._exc: Optional[BaseException] = None
+        self._cancel_requested = False
+        self._last_t: Optional[float] = None    # previous token's emit time
+        self._emitted = 0                       # decode rounds built for it
+        self._slot: Optional[int] = None
+        self._promise = None                    # request:{rid} graph node
+        self._stack = None
+        self._prefill = None
+        self._first: Optional[int] = None       # prefill token
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> list[int]:
+        """Block for the terminal state; the token stream on success,
+        else the failure (``DeadlineExpired`` / ``CancelledError`` /
+        ``RequestRejected`` / the poisoning exception)."""
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"request {self.rid} still in flight")
+        if self._exc is not None:
+            raise self._exc
+        return list(self.tokens)
+
+    def cancel(self):
+        """Ask the gateway to drop this request (client disconnect); it
+        takes effect at the next round boundary, wherever the request is
+        in its lifecycle."""
+        self._cancel_requested = True
+
+    def __repr__(self):
+        return (f"<RequestHandle {self.rid} {self.status} "
+                f"tokens={len(self.tokens)}>")
+
+
+class RequestQueue:
+    """Thread-safe arrival stream feeding a ``Gateway``.
+
+    ``submit`` may be called from any thread while the gateway runs; a
+    trace-driven run pre-submits ``at_round``-tagged requests and calls
+    ``close()``.  With ``max_queue`` set, submissions beyond the backlog
+    cap are *rejected* (the handle terminates with ``RequestRejected``) -
+    the admission-control back edge.
+    """
+
+    def __init__(self, max_queue: Optional[int] = None):
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._items: collections.deque[RequestHandle] = collections.deque()
+        self._ids = itertools.count()
+        self.max_queue = max_queue
+        self.closed = False
+        self.submitted = 0
+        self.rejected = 0
+
+    def submit(self, prompt, *, at_round: int = 0,
+               deadline_ms: Optional[float] = None,
+               cancel_after: Optional[int] = None,
+               inject: Optional[str] = None) -> RequestHandle:
+        """Enqueue one request; returns its handle (possibly already
+        terminal with ``RequestRejected`` when the backlog is full or the
+        queue closed)."""
+        with self._cv:
+            rid = f"r{next(self._ids)}"
+            h = RequestHandle(rid, prompt, at_round=at_round,
+                              deadline_ms=deadline_ms,
+                              cancel_after=cancel_after, inject=inject)
+            if self.closed or (self.max_queue is not None
+                               and len(self._items) >= self.max_queue):
+                why = ("queue closed" if self.closed
+                       else f"backlog at capacity {self.max_queue}")
+                h.status = "rejected"
+                h._exc = RequestRejected(f"{rid}: {why}")
+                h._done.set()
+                self.rejected += 1
+                return h
+            self.submitted += 1
+            self._items.append(h)
+            self._cv.notify_all()
+            return h
+
+    def close(self):
+        """No further submissions; the gateway drains what is queued and
+        returns once everything in flight is terminal."""
+        with self._cv:
+            self.closed = True
+            self._cv.notify_all()
+
+    # -- gateway side --------------------------------------------------------
+    def take_ready(self, round_: int) -> list[RequestHandle]:
+        """Pop every queued handle whose ``at_round`` has arrived, in
+        submission order."""
+        with self._lock:
+            ready = [h for h in self._items if h.at_round <= round_]
+            for h in ready:
+                self._items.remove(h)
+            return ready
+
+    def next_round(self) -> Optional[int]:
+        """The earliest ``at_round`` still queued (trace fast-forward)."""
+        with self._lock:
+            return min((h.at_round for h in self._items), default=None)
+
+    def wait_nonempty(self, timeout: float) -> bool:
+        """Block up to ``timeout`` for a submission or ``close()``."""
+        with self._cv:
+            return self._cv.wait_for(
+                lambda: self._items or self.closed, timeout)
+
+
+class Gateway:
+    """The continuous-batching driver (one ``run()`` per instance).
+
+    Owns the paged ``InferenceCache``, the request registry and the
+    fault/tombstone accounting; emits every admission/cache counter and
+    per-request latency histogram into ``runtime.stats()`` via
+    ``record_serve``.  Built by ``Session.serve_stream``, which supplies
+    the jitted batch=1 prefill step and the ``slots``-wide decode step.
+    """
+
+    def __init__(self, runtime: FuturizedGraph, *, distributed=None,
+                 prefill_step, decode_step, params, prompt_len: int,
+                 gen_len: int, slots: int,
+                 max_inflight: Optional[int] = None,
+                 deadline_ms: Optional[float] = None,
+                 page_bytes: int = 1 << 16, lookahead: int = 2):
+        if gen_len < 1:
+            raise ValueError("gen_len must be >= 1")
+        self.runtime = runtime
+        self.distributed = distributed
+        self.pre = prefill_step
+        self.dec = decode_step
+        self.params = params
+        self.prompt_len = prompt_len
+        self.gen_len = gen_len
+        self.slots = slots
+        self.max_inflight = max(1, max_inflight if max_inflight is not None
+                                else 2 * slots)
+        self.default_deadline_s = (None if deadline_ms is None
+                                   else deadline_ms / 1e3)
+        self.lookahead = max(1, lookahead)
+        self.icache = InferenceCache(page_bytes=page_bytes)
+        self.tok_sh = decode_step.batch_shardings["tokens"]
+        self._lock = threading.Lock()
+        self._handles: dict[str, RequestHandle] = {}
+        self._tombstones: set[str] = set()
+
+    # -- request lifecycle ---------------------------------------------------
+    def _register(self, h: RequestHandle):
+        # the request's graph-visible terminal: a producer-backed promise
+        # the finish node resolves (PHY002/PHY101 trust the producer tag)
+        h._promise = self.runtime.promise(name=f"request:{h.rid}",
+                                          lane=Lane.CHECKPOINT,
+                                          producer="gateway")
+        with self._lock:
+            self._handles[h.rid] = h
+
+    def _admit(self, h: RequestHandle):
+        if self.distributed is not None:
+            h._stack = self.distributed.defer(
+                _stack_request, h.prompt, lane=Lane.PREFETCH,
+                name=f"stack:{h.rid}")
+        else:
+            h._stack = self.runtime.defer(
+                _stack_request, h.prompt, lane=Lane.PREFETCH,
+                name=f"stack:{h.rid}")
+        h._prefill = self.runtime.defer(self._prefill_fn(h), h._stack,
+                                        name=f"prefill:{h.rid}")
+        h.status = "admitted"
+        self.runtime.record_serve(admitted=1)
+
+    def _prefill_fn(self, h: RequestHandle):
+        def prefill(arr):
+            t0 = time.perf_counter()
+            self.runtime.record_serve(phase="queue_wait",
+                                      dt_s=t0 - h.submit_t)
+            if h.inject == "poison-prefill":
+                raise RuntimeError(f"injected prefill poison on {h.rid}")
+            toks = jax.device_put(jnp.asarray(arr)[None, :],
+                                  self.pre.batch_shardings["tokens"])
+            logits, cache1 = self.pre.fn(self.params, {"tokens": toks})
+            first = int(np.asarray(jnp.argmax(logits, -1))[0])
+            state = jax.tree.map(np.asarray, cache1)
+            self.runtime.record_serve(phase="prefill",
+                                      dt_s=time.perf_counter() - t0)
+            with self._lock:
+                if h.rid in self._tombstones:   # dropped while running:
+                    return first                 # park nothing, leak nothing
+                self.icache.put(h.rid, state)
+                h._last_t = time.perf_counter()
+            return first
+        return prefill
+
+    def _resolve(self, h: RequestHandle, status: str,
+                 exc: Optional[BaseException], counter: str):
+        with self._lock:
+            if h._done.is_set():
+                return
+            h.status = status
+            h._exc = exc
+            if h._promise is not None:
+                if exc is None:
+                    h._promise.set_result(list(h.tokens))
+                else:
+                    h._promise.set_exception(
+                        exc, cancelled=isinstance(exc, CancelledError))
+            h._done.set()
+        self.runtime.record_serve(**{counter: 1})
+
+    def _kill_admitted(self, h: RequestHandle, exc: BaseException,
+                       status: str, counter: str):
+        """Reclaim an admitted-but-not-resident request: cancel its chain
+        if possible, tombstone it against a racing ``put``, and free any
+        pages it already parked."""
+        if h._stack is not None:
+            h._stack.cancel()
+        if h._prefill is not None and not h._prefill.cancel():
+            # running or already terminal: mark observed so the live graph
+            # lints clean (PHY004) and a poison is not re-raised at close
+            h._prefill.add_done_callback(lambda f: None)
+        with self._lock:
+            self._tombstones.add(h.rid)
+            self.icache.drop(h.rid)
+        self._resolve(h, status, exc, counter)
+
+    def _expired(self, h: RequestHandle, now: float) -> bool:
+        deadline = (h.deadline_s if h.deadline_s is not None
+                    else self.default_deadline_s)
+        return deadline is not None and now - h.submit_t >= deadline
+
+    def _force_prefill(self, h: RequestHandle) -> bool:
+        """Block for the request's prefill before giving it a slot; on
+        failure (poison, upstream cancel) reclaim and report False."""
+        try:
+            h._first = h._prefill.result()
+        except BaseException as e:  # noqa: BLE001 - resolved into the handle
+            cancelled = isinstance(e, CancelledError)
+            self._kill_admitted(h, e,
+                                "cancelled" if cancelled else "failed",
+                                "cancelled" if cancelled else "failed")
+            return False
+        with self._lock:
+            h.tokens.append(h._first)
+        return True
+
+    # -- device-side node bodies --------------------------------------------
+    def _fresh_carry(self):
+        cache = jax.tree.map(
+            lambda sp: jnp.zeros(sp.shape, sp.dtype), self.dec.cache_specs)
+        tok = jnp.zeros((self.slots, 1), jnp.int32)
+        return tok, cache
+
+    def _recompute(self, rid: str):
+        """Paged-cache miss fallback: rerun the prefill.  Never taken when
+        the page accounting holds - the tests assert its counter is 0."""
+        h = self._handles[rid]
+        toks = jax.device_put(jnp.asarray(np.asarray(h.prompt, np.int32)
+                                          )[None, :],
+                              self.pre.batch_shardings["tokens"])
+        logits, cache1 = self.pre.fn(self.params, {"tokens": toks})
+        first = int(np.asarray(jnp.argmax(logits, -1))[0])
+        return jax.tree.map(np.asarray, cache1), first
+
+    def _refill_fn(self, joins: tuple):
+        def refill(carry, *firsts):
+            tok, cache = carry if carry is not None else self._fresh_carry()
+            for (slot, rid), first in zip(joins, firsts):
+                with self._lock:
+                    state = self.icache.get(rid)
+                    if state is not None:
+                        self.icache.drop(rid)   # device-resident from here
+                if state is None:
+                    self.runtime.record_serve(prefill_recompute=1)
+                    state, first = self._recompute(rid)
+                else:
+                    self.runtime.record_serve(page_hits=1)
+
+                def scatter(c, s, sp, slot=slot):
+                    ax = sp.dims.index("batch")
+                    row = jnp.asarray(np.take(s, 0, axis=ax))
+                    idx = (slice(None),) * ax + (slot,)
+                    return jnp.asarray(c).at[idx].set(row.astype(c.dtype))
+                cache = jax.tree.map(scatter, cache, state,
+                                     self.dec.cache_specs)
+                tok = tok.at[slot, 0].set(first)
+                self.runtime.record_serve(refills=1)
+            tok = jax.device_put(tok, self.tok_sh)
+            cache = jax.device_put(cache, self.dec.cache_shardings)
+            return tok, cache
+        return refill
+
+    def _decode_fn(self, carry, pos):
+        tok, cache = carry
+        logits, cache = self.dec.fn(self.params, cache, {"tokens": tok}, pos)
+        tok = jax.device_put(
+            jnp.argmax(logits, -1)[:, None].astype(jnp.int32), self.tok_sh)
+        return tok, cache
+
+    def _emit_fn(self, live_rows: tuple):
+        def emit(carry, *_prev_emit):
+            tokv = np.asarray(carry[0])[:, 0]   # forces the transfer
+            now = time.perf_counter()
+            with self._lock:
+                for slot, rid in live_rows:
+                    h = self._handles[rid]
+                    h.tokens.append(int(tokv[slot]))
+                    if h._last_t is not None:
+                        self.runtime.record_serve(
+                            phase="decode_token", dt_s=now - h._last_t)
+                    h._last_t = now
+            self.runtime.record_serve(
+                real_tokens=len(live_rows),
+                padded_slot_tokens=self.slots - len(live_rows))
+        return emit
+
+    def _finish_fn(self, h: RequestHandle, cancelled: bool):
+        def finish(_emit_val):
+            self.runtime.record_serve(
+                phase="total", dt_s=time.perf_counter() - h.submit_t)
+            if cancelled:
+                self._resolve(h, "cancelled", CancelledError(h.rid),
+                              "cancelled")
+            else:
+                self._resolve(h, "done", None, "completed")
+        return finish
+
+    # -- the driver ----------------------------------------------------------
+    def run(self, queue: RequestQueue) -> dict:
+        """Drive the gateway until the queue closes and everything in
+        flight is terminal.  Returns the run summary (handles in intake
+        order plus driver-side counts); all counters/histograms land in
+        ``runtime.stats()``."""
+        runtime = self.runtime
+        pending: collections.deque[RequestHandle] = collections.deque()
+        admitted: collections.deque[RequestHandle] = collections.deque()
+        residents: list[Optional[RequestHandle]] = [None] * self.slots
+        intake: list[RequestHandle] = []
+        finishes = []
+        emit_hist: collections.deque = collections.deque()
+        carry = None
+        prev_emit = None
+        epoch = -1
+        round_ = 0
+        j = 0
+
+        def inflight() -> int:
+            return len(admitted) + sum(r is not None for r in residents)
+
+        try:
+            while True:
+                now = time.perf_counter()
+                # 1. ingest arrivals whose round has come
+                for h in queue.take_ready(round_):
+                    self._register(h)
+                    intake.append(h)
+                    pending.append(h)
+                # 2. queued-side faults: user cancels, expired deadlines
+                for h in list(pending):
+                    if h._cancel_requested:
+                        pending.remove(h)
+                        self._resolve(h, "cancelled",
+                                      CancelledError(h.rid), "cancelled")
+                    elif self._expired(h, now):
+                        pending.remove(h)
+                        self._resolve(h, "expired",
+                                      DeadlineExpired(h.rid), "expired")
+                # 3. admission: launch prefill chains up to max_inflight
+                while pending and inflight() < self.max_inflight:
+                    h = pending.popleft()
+                    self._admit(h)
+                    admitted.append(h)
+                # 4. admitted-side faults: cancel/expiry mid-prefill,
+                #    poisoned chains detected as soon as they are terminal
+                for h in list(admitted):
+                    exc = None
+                    if h._cancel_requested:
+                        exc, status = CancelledError(h.rid), "cancelled"
+                    elif self._expired(h, now):
+                        exc, status = DeadlineExpired(h.rid), "expired"
+                    elif (h._prefill.done()
+                          and h._prefill.exception() is not None):
+                        exc, status = h._prefill.exception(), "failed"
+                    if exc is not None:
+                        admitted.remove(h)
+                        self._kill_admitted(h, exc, status, status)
+                # 5. retire residents that finished or were cancelled
+                changed = False
+                for s, h in enumerate(residents):
+                    if h is None:
+                        continue
+                    cancelled = (h._cancel_requested
+                                 or (h.cancel_after is not None
+                                     and h._emitted >= h.cancel_after))
+                    if cancelled or h._emitted >= self.gen_len:
+                        fin = runtime.defer(
+                            self._finish_fn(h, cancelled), prev_emit,
+                            lane=Lane.CHECKPOINT, name=f"finish:{h.rid}")
+                        finishes.append(fin)
+                        residents[s] = None
+                        changed = True
+                # 6. fill free slots from the admitted queue (prefill is
+                #    forced first: a slot is only ever given a request
+                #    whose state is already parked in pages)
+                joiners = []
+                free = [s for s in range(self.slots) if residents[s] is None]
+                while free and admitted:
+                    h = admitted.popleft()
+                    if not self._force_prefill(h):
+                        continue
+                    s = free.pop(0)
+                    h._slot, h.status = s, "active"
+                    residents[s] = h
+                    joiners.append((s, h))
+                    changed = True
+                # 7. nothing resident: fast-forward to the next arrival,
+                #    wait for live traffic, or drain out
+                if all(r is None for r in residents):
+                    nxt = queue.next_round()
+                    if nxt is not None:
+                        round_ = max(round_ + 1, nxt)
+                        continue
+                    if not queue.closed:
+                        queue.wait_nonempty(0.05)
+                        round_ += 1
+                        continue
+                    break
+                # 8. membership changed: cut an epoch, load pages
+                if changed or carry is None:
+                    epoch += 1
+                    j = 0
+                    joins = tuple((s, h.rid) for s, h in joiners)
+                    carry = runtime.defer(
+                        self._refill_fn(joins), carry,
+                        *[h._prefill for _, h in joiners],
+                        name=f"refill:e{epoch}")
+                # 9. one decode round: per-slot positions, chained emit
+                live_rows = tuple((h._slot, h.rid)
+                                  for h in residents if h is not None)
+                pos = np.full(self.slots, self.prompt_len, np.int32)
+                for s, rid in live_rows:
+                    pos[s] = self.prompt_len + self._handles[rid]._emitted
+                carry = runtime.defer(self._decode_fn, carry,
+                                      jnp.asarray(pos),
+                                      name=f"decode:e{epoch}:t{j}")
+                emit_deps = (carry,) if prev_emit is None \
+                    else (carry, prev_emit)
+                prev_emit = runtime.defer(self._emit_fn(live_rows),
+                                          *emit_deps, lane=Lane.CHECKPOINT,
+                                          name=f"emit:e{epoch}:t{j}")
+                emit_hist.append(prev_emit)
+                if len(emit_hist) > self.lookahead:   # bound the lead so
+                    emit_hist.popleft().result()      # faults/arrivals land
+                for _, rid in live_rows:
+                    self._handles[rid]._emitted += 1
+                j += 1
+                round_ += 1
+            # drain: force the emit chain tail and every finish node
+            if prev_emit is not None:
+                prev_emit.result()
+            for fin in finishes:
+                fin.result()
+        finally:
+            # never leave an unresolved promise behind (barrier/shutdown
+            # would hang on it): anything non-terminal is failed out
+            for h in intake:
+                if not h._done.is_set():
+                    self._resolve(h, "failed",
+                                  RuntimeError(f"gateway torn down with "
+                                               f"{h.rid} in flight"),
+                                  "failed")
+        self.runtime.record_serve(rejected=queue.rejected,
+                                  **self.icache.counters())
+        counts = collections.Counter(h.status for h in intake)
+        return {"handles": intake,
+                "streams": {h.rid: list(h.tokens) for h in intake},
+                "completed": counts.get("done", 0),
+                "cancelled": counts.get("cancelled", 0),
+                "expired": counts.get("expired", 0),
+                "failed": counts.get("failed", 0),
+                "rejected": queue.rejected,
+                "rounds": round_, "epochs": epoch + 1,
+                "cache": self.icache.counters()}

@@ -847,7 +847,7 @@ class Session:
         requests = len(waiting)
         if not waiting:        # nothing to serve: no dummy wave, no tokens
             return {"tokens_per_s": 0.0, "requests": 0, "tokens": 0,
-                    "nodes": [], "trace": [],
+                    "padded_tokens": 0, "nodes": [], "trace": [],
                     "runtime_stats": self.runtime.stats().to_json()}
         tok_sh = dec.batch_shardings["tokens"]
 
@@ -881,6 +881,8 @@ class Session:
             while len(wave) < slots:            # pad idle slots
                 wave.append(np.zeros(prompt_len, np.int32))
             return wave, n_real
+
+        padded_out = 0
 
         def _prefill(batch, *_prev_tail):
             # *_prev_tail: dispatch-order edge from the previous wave's last
@@ -920,7 +922,14 @@ class Session:
                                           jnp.int32(prompt_len + t),
                                           name=f"decode:w{w}:t{t}")
                 tail = carry
-                tokens_out += slots * gen_len
+                # padded idle slots decode too, but their tokens are not
+                # throughput: account them separately so latency/throughput
+                # numbers aren't diluted by padding (RuntimeStats "serve")
+                tokens_out += n_real * gen_len
+                padded_out += (slots - n_real) * gen_len
+                runtime.record_serve(
+                    real_tokens=n_real * gen_len,
+                    padded_slot_tokens=(slots - n_real) * gen_len)
                 done += n_real
                 if nxt is None:
                     break
@@ -941,10 +950,117 @@ class Session:
         if verbose:
             print(f"[serve] {requests} requests, {tokens_out} tokens in "
                   f"{dt:.2f}s -> {tps:.1f} tok/s (slots={slots}, "
-                  f"decode nodes {n_decode}, host tasks {st.completed})")
+                  f"padded {padded_out}, decode nodes {n_decode}, "
+                  f"host tasks {st.completed})")
         return {"tokens_per_s": tps, "requests": requests,
-                "tokens": tokens_out, "nodes": nodes,
+                "tokens": tokens_out, "padded_tokens": padded_out,
+                "nodes": nodes,
                 "trace": tracer.signature(), "runtime_stats": stats_json}
+
+    # -- serve (gateway) -----------------------------------------------------
+    def serve_stream(self, requests: int = 8, *, prompt_len: int = 32,
+                     gen_len: int = 16, slots: int = 4,
+                     max_inflight: Optional[int] = None,
+                     deadline_ms: Optional[float] = None,
+                     trace=None, queue=None, page_bytes: int = 1 << 16,
+                     verbose: bool = True) -> dict:
+        """The serving gateway (DESIGN.md §14): async continuous batching
+        with mid-flight arrivals, admission control and the paged
+        inference cache, instead of ``serve``'s synchronized waves.
+
+        Each request is a first-class node chain (``stack`` -> ``prefill``
+        -> ``refill``/``decode``/``emit`` -> ``finish`` resolving its
+        ``request:{rid}`` promise); prefill runs once at admission and its
+        decode state parks in ``core.paging.InferenceCache`` pages until a
+        slot frees, so slot refill never recomputes prefill.
+
+        Args:
+            requests: synthetic request count when neither ``trace`` nor
+                ``queue`` is given (all arriving at round 0).
+            prompt_len, gen_len, slots: as for ``serve``.
+            max_inflight: admission cap on requests holding resources
+                (queued + decoding); defaults to ``2 * slots``.
+            deadline_ms: default per-request deadline; a request still
+                short of a slot when it lapses expires cleanly.
+            trace: deterministic arrival script - a list of dicts with
+                optional ``prompt``, ``at_round`` (decode round of
+                arrival), ``deadline_ms``, ``cancel_after`` (cancel after
+                that many decoded tokens), ``inject``
+                (``"poison-prefill"``).
+            queue: a live ``gateway.RequestQueue`` fed from other
+                threads; the gateway drains it until ``close()``.
+            page_bytes: page size of the inference cache pool.
+            verbose: print the summary line.
+        Returns:
+            dict with per-request ``streams``/``handles``, admission
+            counts, ``tokens``/``padded_tokens``/``tokens_per_s``, the
+            traced ``nodes``/``trace`` and ``runtime_stats`` (including
+            the ``serve`` counters and ``request_latency_hist``).
+        """
+        from .gateway import Gateway, RequestQueue
+        plan, runtime, cfg = self.plan, self.runtime, self.cfg
+        if cfg.family == "encdec":
+            raise ValueError("serve_stream does not support encdec "
+                             "architectures (scalar-only decoder position "
+                             "embedding); use serve()")
+        pre1 = self._serve_steps_for(prompt_len, gen_len, 1)[0]
+        dec = self._serve_steps_for(prompt_len, gen_len, slots)[1]
+        params = init_params(pre1.specs, jax.random.PRNGKey(plan.seed))
+        params = jax.device_put(params, pre1.param_shardings)
+
+        if queue is None:
+            q = RequestQueue()
+            entries = trace if trace is not None \
+                else [{"at_round": 0} for _ in range(requests)]
+            rng = np.random.default_rng(plan.seed)
+            for e in entries:
+                prompt = e.get("prompt")
+                if prompt is None:
+                    prompt = rng.integers(0, cfg.vocab,
+                                          prompt_len).astype(np.int32)
+                q.submit(prompt, at_round=e.get("at_round", 0),
+                         deadline_ms=e.get("deadline_ms", deadline_ms),
+                         cancel_after=e.get("cancel_after"),
+                         inject=e.get("inject"))
+            q.close()
+        else:
+            q = queue
+
+        gw = Gateway(runtime, distributed=self.distributed,
+                     prefill_step=pre1, decode_step=dec, params=params,
+                     prompt_len=prompt_len, gen_len=gen_len, slots=slots,
+                     max_inflight=max_inflight, deadline_ms=deadline_ms,
+                     page_bytes=page_bytes)
+        tracer = Trace(runtime)
+        remove = runtime.add_trace_hook(tracer.record)
+        t0 = time.time()
+        try:
+            out = gw.run(q)
+        finally:
+            remove()
+        dt = time.time() - t0
+        tokens = sum(max(0, len(h.tokens) - 1) for h in out["handles"])
+        st = runtime.stats()
+        stats_json = st.to_json()
+        if self.distributed is not None:
+            stats_json["distributed"] = self.distributed.stats()
+        out.update({
+            "requests": q.submitted, "tokens": tokens,
+            "padded_tokens": st.serve.get("padded_slot_tokens", 0),
+            "tokens_per_s": tokens / dt if dt > 0 else 0.0,
+            "nodes": tracer.names(), "trace": tracer.signature(),
+            "runtime_stats": stats_json,
+        })
+        if verbose:
+            print(f"[gateway] {q.submitted} requests "
+                  f"({out['completed']} done, {out['cancelled']} "
+                  f"cancelled, {out['expired']} expired, "
+                  f"{out['failed']} failed, {out['rejected']} rejected), "
+                  f"{tokens} tokens in {dt:.2f}s -> "
+                  f"{out['tokens_per_s']:.1f} tok/s over {out['epochs']} "
+                  f"epochs (page hits {st.serve.get('page_hits', 0)}/"
+                  f"{st.serve.get('refills', 0)} refills)")
+        return out
 
     # -- dryrun -------------------------------------------------------------
     def dryrun(self, shape: Optional[str] = None) -> dict:

@@ -1,25 +1,40 @@
 """Serving launcher: a thin argparse shim over ``frontend.Plan/Session``.
 
-Continuous-batching-lite lives in ``Session.serve`` (frontend/plan.py): a
-fixed pool of decode slots; finished sequences (hit --gen-len) are retired
-and refilled from the waiting queue with a fresh prefill.  Each wave runs
-as a futurized tree - a prefill node plus chained, named decode nodes -
-while the next wave's host prep runs as a PREFETCH node.
+Two serving loops share this entry point:
 
-Example:
+* the default wave loop (``Session.serve``): a fixed pool of decode slots;
+  finished sequences (hit --gen-len) are retired and refilled from the
+  waiting queue with a fresh prefill, each wave a futurized tree;
+* ``--serve-stream`` (``Session.serve_stream``, DESIGN.md §14): the
+  continuous-batching gateway - requests arrive mid-flight through a
+  ``RequestQueue``, admission control caps in-flight work
+  (``--max-inflight``) and expires laggards (``--deadline-ms``), and
+  prefill state parks in the paged inference cache so retire-and-refill
+  loads pages instead of recomputing.
+
+Examples:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --tiny \
       --requests 16 --slots 4 --prompt-len 32 --gen-len 16
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --tiny \
+      --serve-stream --requests 16 --slots 4 --max-inflight 8 \
+      --deadline-ms 5000
 """
 from __future__ import annotations
 
 import argparse
 
-from repro.frontend import cli_args, plan_from_args
+from repro.frontend import cli_args, plan_from_args, serve_flags
 
 
 def run(args) -> dict:
     plan = plan_from_args(args)
     with plan.compile() as session:
+        if getattr(args, "serve_stream", False):
+            return session.serve_stream(
+                requests=args.requests, prompt_len=args.prompt_len,
+                gen_len=args.gen_len, slots=args.slots,
+                max_inflight=args.max_inflight,
+                deadline_ms=args.deadline_ms)
         return session.serve(
             requests=args.requests, prompt_len=args.prompt_len,
             gen_len=args.gen_len, slots=args.slots)
@@ -31,6 +46,7 @@ def parser() -> argparse.ArgumentParser:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=16)
+    serve_flags(ap)
     return ap
 
 

@@ -228,7 +228,10 @@ def attend(q, k, v, *, impl: str = "chunked", **kw):
 # ---------------------------------------------------------------------------
 def decode_attend(q, k_cache, v_cache, pos, *, scale: Optional[float] = None,
                   window: Optional[int] = None):
-    """q: [B,1,H,hd]; caches [B,S,Hkv,hd]; pos: scalar current index.
+    """q: [B,1,H,hd]; caches [B,S,Hkv,hd]; pos: scalar current index, or a
+    ``[B]`` vector when batch rows sit at different offsets (the serving
+    gateway's continuous batch, where each slot decodes its own token
+    index - DESIGN.md §14).
 
     Grouped-GQA form: KV heads are never expanded, so the only shardable
     names are (batch, kv_heads, kv_seq) - a sequence-sharded cache keeps its
@@ -247,27 +250,41 @@ def decode_attend(q, k_cache, v_cache, pos, *, scale: Optional[float] = None,
                     ).astype(jnp.float32) * scale      # [B,Hkv,G,1,S]
     lg = act_constrain(lg, ("batch", "kv_heads", None, None, "kv_seq"))
     k_pos = jnp.arange(S)
-    valid = k_pos <= pos
-    if window is not None:
-        valid = valid & (k_pos > pos - window)
-    lg = jnp.where(valid[None, None, None, None, :], lg, NEG_INF)
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        valid = k_pos <= pos
+        if window is not None:
+            valid = valid & (k_pos > pos - window)
+        mask = valid[None, None, None, None, :]
+    else:                                   # per-row positions: [B] -> [B,S]
+        valid = k_pos[None, :] <= pos[:, None]
+        if window is not None:
+            valid = valid & (k_pos[None, :] > pos[:, None] - window)
+        mask = valid[:, None, None, None, :]
+    lg = jnp.where(mask, lg, NEG_INF)
     pr = jax.nn.softmax(lg, axis=-1).astype(q.dtype)
     o = jnp.einsum("bhgqs,bshk->bqhgk", pr, v_cache)
     return o.reshape(B, 1, H, hd)
 
 
 def cache_update(k_cache, v_cache, k_new, v_new, pos, *, mode: str = "dus"):
-    """Write the new token's K/V at ``pos`` (scalar).
+    """Write the new token's K/V at ``pos`` (scalar, or ``[B]`` for
+    per-row write offsets).
 
     mode="dus": dynamic-update-slice (minimal write, but the SPMD
     partitioner reshards a cache whose sequence dim is sharded).
     mode="masked": one-hot select over the sequence dim - elementwise, so a
     sequence-sharded cache updates locally with zero collectives at the cost
-    of a full cache rewrite.
+    of a full cache rewrite.  A ``[B]`` pos always takes this form: there
+    is no per-row dynamic-update-slice, and the one-hot write is exactly
+    row-independent, which the gateway's bit-parity guarantees rely on.
     """
-    if mode == "masked":
+    pos = jnp.asarray(pos)
+    if mode == "masked" or pos.ndim:
         S = k_cache.shape[1]
-        hit = (jnp.arange(S) == pos)[None, :, None, None]
+        hit = ((jnp.arange(S) == pos)[None, :, None, None] if pos.ndim == 0
+               else (jnp.arange(S)[None, :] == pos[:, None])[:, :, None,
+                                                             None])
         k_cache = jnp.where(hit, k_new.astype(k_cache.dtype), k_cache)
         v_cache = jnp.where(hit, v_new.astype(v_cache.dtype), v_cache)
         return k_cache, v_cache

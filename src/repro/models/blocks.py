@@ -69,10 +69,14 @@ def kv_cache_specs(cfg, batch: int, seq: int, n_layers: Optional[int] = None,
 
 
 def tblock_decode(x, p, cfg, cache, pos, *, enc_kv=None):
-    """x: [B,1,D]; cache: {"k","v"} [B,S,Hkv,hd]; pos: scalar int."""
+    """x: [B,1,D]; cache: {"k","v"} [B,S,Hkv,hd]; pos: scalar int, or
+    ``[B]`` per-row positions (continuous batch, one offset per slot)."""
     h = layers.apply_norm(x, p["ln_attn"], cfg.norm)
+    pos = jnp.asarray(pos)
+    positions = (pos[:, None] if pos.ndim
+                 else jnp.full((h.shape[0], 1), pos))
     q, k, v = attention.project_qkv(
-        h, p["attn"], positions=jnp.full((h.shape[0], 1), pos),
+        h, p["attn"], positions=positions,
         rope_theta=cfg.rope_theta, use_rope=cfg.use_rope)
     kc, vc = attention.cache_update(cache["k"], cache["v"], k, v, pos,
                                     mode=cfg.cache_update)

@@ -214,7 +214,9 @@ class LM:
 
     # -- decode ------------------------------------------------------------------
     def decode_step(self, params, cache, batch, pos):
-        """batch["tokens"]: [B, 1]; pos: scalar int32."""
+        """batch["tokens"]: [B, 1]; pos: scalar int32, or ``[B]`` int32 for
+        per-row positions (the gateway's continuous batch; recurrent
+        SSM/xLSTM blocks ignore pos, attention blocks broadcast it)."""
         cfg = self.cfg
         fam = cfg.family
         x = layers.embed(batch["tokens"], params["embed"]).astype(cfg.c_dtype)

@@ -391,6 +391,119 @@ def test_forwarding_stub_deref_equals_direct_deref(n, seed):
         b.close()
 
 
+# -- paged inference cache (DESIGN.md §14) ------------------------------------
+
+@given(seed=st.integers(0, 10 ** 6), n_events=st.integers(1, 60),
+       page_bytes=st.sampled_from([8, 64, 256]))
+def test_page_pool_event_soup_invariants(seed, n_events, page_bytes):
+    """Seeded alloc/free/retire soup over ``PagePool``: after EVERY event
+    no page is owned by two live owners, freed pages are reused before
+    the pool grows, and the pool's books (allocs/frees/live/size) stay
+    consistent with the test's own shadow ledger."""
+    import random as _random
+    from repro.core.paging import PageError, PagePool
+
+    rng = _random.Random(seed)
+    pool = PagePool(page_bytes)
+    held: dict = {}                          # owner -> [page ids]
+
+    def do_alloc():
+        owner = f"r{rng.randrange(8)}"
+        held.setdefault(owner, []).extend(
+            pool.alloc(owner, rng.randint(0, 3)))
+
+    def do_free():
+        owners = [o for o, ps in held.items() if ps]
+        if not owners:
+            return
+        owner = rng.choice(owners)
+        k = rng.randint(1, len(held[owner]))
+        batch = [held[owner].pop() for _ in range(k)]
+        pool.free(batch, owner)
+
+    def do_retire():                         # retire = free everything held
+        owners = [o for o, ps in held.items() if ps]
+        if not owners:
+            return
+        owner = rng.choice(owners)
+        pool.free(held.pop(owner), owner)
+
+    for _ in range(n_events):
+        rng.choice([do_alloc, do_alloc, do_free, do_retire])()
+        owners = pool.owners()
+        mine = {p: o for o, ps in held.items() for p in ps}
+        assert owners == mine                # single ownership, no leaks
+        assert pool.live == len(mine)
+        assert pool.size >= pool.live
+        assert pool.allocs == pool.grown + pool.reused
+        assert pool.allocs - pool.frees == pool.live
+
+    # LIFO reuse: with the whole pool free, an alloc must NOT grow it
+    for owner in list(held):
+        pool.free(held.pop(owner), owner)
+    size_before, grown_before = pool.size, pool.grown
+    got = pool.alloc("reuser", min(3, size_before))
+    assert pool.grown == grown_before        # reused, not grown
+    assert pool.size == size_before
+    for pid in got:                          # and reused pages are scrubbed
+        assert not pool.read(pid, "reuser").any()
+    # accounting violations raise, never corrupt
+    if got:
+        try:
+            pool.free(got, "somebody-else")
+            raise AssertionError("foreign free must raise PageError")
+        except PageError:
+            pass
+        pool.free(got, "reuser")
+        try:
+            pool.free(got, "reuser")
+            raise AssertionError("double free must raise PageError")
+        except PageError:
+            pass
+
+
+@given(seed=st.integers(0, 10 ** 6), page_bytes=st.sampled_from([16, 128]),
+       n_cycles=st.integers(1, 8))
+def test_inference_cache_put_get_drop_no_stale_state(seed, page_bytes,
+                                                     n_cycles):
+    """alloc->write->free->realloc never leaks stale state: across
+    put/drop cycles that deliberately recycle pages, every ``get``
+    reassembles ITS request's pytree bit-for-bit (distinct fill patterns
+    per request) and a dropped rid stays gone."""
+    from repro.core.paging import InferenceCache
+
+    rng = np.random.default_rng(seed)
+    icache = InferenceCache(page_bytes=page_bytes)
+    for cycle in range(n_cycles):
+        live = {}
+        for r in range(rng.integers(1, 4)):
+            rid = f"c{cycle}r{r}"
+            state = {"conv": rng.integers(0, 255,
+                                          (int(rng.integers(1, 5)), 3),
+                                          dtype=np.uint8),
+                     "ssm": (np.full((int(rng.integers(1, 7)),),
+                                     cycle * 16 + r, np.float32),
+                             np.arange(int(rng.integers(1, 9)),
+                                       dtype=np.int32) + cycle)}
+            icache.put(rid, state)
+            live[rid] = state
+        for rid, state in live.items():      # bit-identical round-trip
+            back = icache.get(rid)
+            np.testing.assert_array_equal(back["conv"], state["conv"])
+            np.testing.assert_array_equal(back["ssm"][0], state["ssm"][0])
+            np.testing.assert_array_equal(back["ssm"][1], state["ssm"][1])
+        for rid in live:
+            assert icache.drop(rid)
+            assert icache.get(rid) is None   # gone means gone
+    assert len(icache) == 0
+    c = icache.counters()
+    assert c["pages_live"] == 0              # everything reclaimed
+    assert c["cache_hits"] == c["cache_puts"]
+    # recycling happened across cycles iff there was more than one
+    if n_cycles > 1 and c["page_allocs"]:
+        assert c["pages_reused"] > 0
+
+
 def _echo(x):
     return x
 

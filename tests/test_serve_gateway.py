@@ -1,0 +1,294 @@
+"""Serving gateway battery (DESIGN.md §14): continuous batching with
+mid-flight arrivals and the paged inference cache, plus fault injection
+(cancel mid-decode, deadline expiry mid-prefill, poisoned prefill) and
+the 2-locality parity / kill-locality drills.
+
+The load-bearing property: prefill runs ONCE per request (at admission,
+batch=1) and decode math is row-independent, so a request's token stream
+depends only on its prompt.  Every fault test asserts the survivors'
+streams are *bit-identical* to an unperturbed run AND that the faulted
+request's slot and pages were reclaimed (``pages_live == 0``)."""
+import threading
+import time
+from concurrent.futures import CancelledError
+
+import numpy as np
+import pytest
+
+from repro.analysis import sanitize
+from repro.frontend import Plan
+from repro.frontend.gateway import (DeadlineExpired, RequestQueue,
+                                    RequestRejected)
+
+ARCH = "qwen2.5-3b"
+ARRIVALS = (0, 0, 1, 3, 3)           # staggered, requests > slots
+
+
+def _plan(**kw):
+    kw.setdefault("arch", ARCH)
+    return Plan(**kw)
+
+
+def _kwargs(**over):
+    kw = dict(prompt_len=16, gen_len=4, slots=2, verbose=False)
+    kw.update(over)
+    return kw
+
+
+def _stream(trace, **over):
+    """One fresh-session gateway run over a deterministic trace."""
+    with _plan().compile() as session:
+        return session.serve_stream(trace=trace, **_kwargs(**over))
+
+
+_BASELINES: dict = {}
+
+
+def _baseline_streams(arrivals, **over):
+    """Unperturbed streams for an arrival script (cached per config):
+    rid numbering and prompts depend only on entry order and plan.seed,
+    so a fault run over the same script is directly comparable."""
+    key = (tuple(arrivals), tuple(sorted(over.items())))
+    if key not in _BASELINES:
+        out = _stream([{"at_round": r} for r in arrivals], **over)
+        assert out["completed"] == len(arrivals)
+        _BASELINES[key] = out["streams"]
+    return _BASELINES[key]
+
+
+# -- the tentpole: mid-flight arrivals, zero prefill recomputation -----------
+
+def test_streamed_arrivals_complete_with_zero_prefill_recompute():
+    with _plan().compile() as session:
+        out = session.serve_stream(
+            trace=[{"at_round": r} for r in ARRIVALS], **_kwargs())
+        assert session.lint() == []          # live gateway graph is clean
+    n, gen = len(ARRIVALS), 4
+    assert out["completed"] == n
+    assert out["cancelled"] == out["expired"] == out["failed"] == 0
+    # every stream: the prefill token plus gen_len decoded tokens
+    assert sorted(out["streams"]) == [f"r{i}" for i in range(n)]
+    assert all(len(s) == gen + 1 for s in out["streams"].values())
+    assert out["tokens"] == n * gen
+
+    # the paged-cache contract: every slot join loaded pages; the prefill
+    # recompute fallback never ran; everything was reclaimed
+    serve = out["runtime_stats"]["serve"]
+    assert serve["refills"] == serve["page_hits"] == n
+    assert serve.get("prefill_recompute", 0) == 0
+    cache = out["cache"]
+    assert cache["cache_puts"] == cache["cache_hits"] == n
+    assert cache["pages_live"] == 0 and cache["cache_entries"] == 0
+    assert cache["page_allocs"] == cache["page_frees"]
+
+    # staggered arrivals mean epochs were cut mid-run, not one big wave
+    assert out["epochs"] >= 2
+    names = set(out["nodes"])
+    for i in range(n):
+        assert {f"stack:r{i}", f"prefill:r{i}", f"finish:r{i}",
+                f"request:r{i}"} <= names
+    assert "refill:e0" in names and "decode:e0:t0" in names
+
+    # latency histograms: every phase observed, counts match the run
+    hist = out["runtime_stats"]["request_latency_hist"]
+    assert hist["edges_s"] and len(hist["labels"]) == len(hist["edges_s"]) + 1
+    counts = hist["counts"]
+    assert sum(counts["queue_wait"]) == n
+    assert sum(counts["prefill"]) == n
+    assert sum(counts["total"]) == n
+    assert sum(counts["decode_token"]) == n * gen
+
+    # padded-slot accounting: real + padded covers every (round, slot)
+    assert serve["real_tokens"] == n * gen
+    assert serve["real_tokens"] + serve["padded_slot_tokens"] \
+        == out["rounds"] * 2
+    assert out["padded_tokens"] == serve["padded_slot_tokens"]
+
+
+def test_gateway_trace_builder_matches_live_run():
+    """phylint's static mirror (analysis.gateway_trace) and the live
+    gateway build the same tree: same names, lanes and edges."""
+    from repro.analysis import gateway_trace
+
+    out = _stream([{"at_round": r} for r in ARRIVALS])
+    sig = out["trace"]
+    live = {(name, lane, tuple(sig[d][0] for d in deps))
+            for name, lane, deps in sig}
+    g = gateway_trace(_plan(), requests=len(ARRIVALS), gen_len=4, slots=2,
+                      arrivals=list(ARRIVALS))
+    mirror = {(n.name, n.lane, tuple(g.nodes[d].name for d in n.deps))
+              for n in g.nodes}
+    assert live == mirror
+
+
+# -- fault injection ---------------------------------------------------------
+
+def test_cancel_mid_decode_reclaims_slot_and_preserves_survivors():
+    base = _baseline_streams(ARRIVALS)
+    trace = [{"at_round": r} for r in ARRIVALS]
+    trace[1]["cancel_after"] = 2             # r1: cancel after 2 tokens
+    out = _stream(trace)
+    assert out["cancelled"] == 1 and out["completed"] == len(ARRIVALS) - 1
+    h = next(h for h in out["handles"] if h.rid == "r1")
+    assert h.status == "cancelled"
+    with pytest.raises(CancelledError):
+        h.result(timeout=5)
+    assert len(h.tokens) == 1 + 2            # prefill + the 2 decoded
+    assert out["streams"]["r1"] == base["r1"][:3]   # a prefix, not junk
+    for rid, stream in base.items():         # survivors are bit-identical
+        if rid != "r1":
+            assert out["streams"][rid] == stream
+    assert out["cache"]["pages_live"] == 0
+    assert out["cache"]["cache_entries"] == 0
+
+
+def test_deadline_expiry_while_waiting_for_a_slot():
+    """slots=1: r0 monopolizes the slot; r1 is admitted (prefill runs,
+    pages park) but its deadline lapses before a slot frees - it must
+    expire cleanly with its pages reclaimed, and r0 is untouched."""
+    kw = dict(gen_len=8, slots=1)
+    base = _baseline_streams((0,), **kw)
+    out = _stream([{"at_round": 0}, {"at_round": 0, "deadline_ms": 50}],
+                  **kw)
+    assert out["completed"] == 1 and out["expired"] == 1
+    h = next(h for h in out["handles"] if h.rid == "r1")
+    assert h.status == "expired"
+    with pytest.raises(DeadlineExpired):
+        h.result(timeout=5)
+    assert out["streams"]["r0"] == base["r0"]
+    assert out["cache"]["pages_live"] == 0
+    assert out["cache"]["cache_entries"] == 0
+    assert out["runtime_stats"]["serve"].get("prefill_recompute", 0) == 0
+
+
+def test_poisoned_prefill_is_contained_to_its_chain():
+    base = _baseline_streams(ARRIVALS)
+    trace = [{"at_round": r} for r in ARRIVALS]
+    trace[2]["inject"] = "poison-prefill"
+    out = _stream(trace)
+    assert out["failed"] == 1 and out["completed"] == len(ARRIVALS) - 1
+    h = next(h for h in out["handles"] if h.rid == "r2")
+    assert h.status == "failed"
+    with pytest.raises(RuntimeError, match="injected prefill poison"):
+        h.result(timeout=5)
+    assert h.tokens == []                    # never reached a slot
+    for rid, stream in base.items():         # the poison never crossed
+        if rid != "r2":                      # into the shared decode chain
+            assert out["streams"][rid] == stream
+    assert out["cache"]["pages_live"] == 0
+
+
+def test_fault_battery_drains_cleanly_under_sanitizer():
+    """All three faults in one run with the concurrency sanitizer armed:
+    the gateway must drain without a deadlock diagnostic (every promise
+    is producer-backed and resolved, even for killed chains)."""
+    trace = [{"at_round": r} for r in ARRIVALS]
+    trace[1]["cancel_after"] = 1
+    trace[2]["inject"] = "poison-prefill"
+    trace[4]["deadline_ms"] = 0.0            # expires before admission
+    with sanitize.enabled():
+        out = _stream(trace)
+        assert sanitize.get().diagnostics() == []
+    assert out["completed"] == 2
+    assert out["cancelled"] == out["expired"] == out["failed"] == 1
+    assert out["cache"]["pages_live"] == 0
+    statuses = {h.rid: h.status for h in out["handles"]}
+    assert statuses == {"r0": "done", "r1": "cancelled", "r2": "failed",
+                        "r3": "done", "r4": "expired"}
+
+
+# -- the live side: threads, admission, rejection ----------------------------
+
+def test_live_queue_submissions_from_another_thread():
+    with _plan().compile() as session:
+        rng = np.random.default_rng(11)
+        prompts = [rng.integers(0, session.cfg.vocab, 16).astype(np.int32)
+                   for _ in range(3)]
+        q = RequestQueue()
+
+        def feeder():
+            for p in prompts:
+                q.submit(p)
+                time.sleep(0.02)
+            q.close()
+
+        t = threading.Thread(target=feeder)
+        t.start()
+        out = session.serve_stream(queue=q, **_kwargs())
+        t.join()
+    assert out["completed"] == 3
+    assert all(h.result(timeout=5) == out["streams"][h.rid]
+               for h in out["handles"])
+
+
+def test_request_queue_backlog_and_close_reject():
+    q = RequestQueue(max_queue=1)
+    ok = q.submit([1, 2])
+    full = q.submit([3, 4])
+    assert ok.status == "queued" and full.status == "rejected"
+    with pytest.raises(RequestRejected, match="capacity"):
+        full.result(timeout=1)
+    q.close()
+    late = q.submit([5, 6])
+    assert late.status == "rejected"
+    with pytest.raises(RequestRejected, match="closed"):
+        late.result(timeout=1)
+    assert q.submitted == 1 and q.rejected == 2
+
+
+def test_wave_serve_accounts_padded_slot_compute():
+    """``Session.serve`` pads idle slots into every wave; the padded-slot
+    compute must be accounted separately, never folded into tokens."""
+    with _plan().compile() as session:
+        out = session.serve(requests=3, slots=2, prompt_len=16, gen_len=4,
+                            verbose=False)
+        serve = session.runtime.stats().serve
+    assert out["tokens"] == 3 * 4            # only real requests
+    assert out["padded_tokens"] == 1 * 4     # wave 1 ran a padded slot
+    assert serve["real_tokens"] == 12
+    assert serve["padded_slot_tokens"] == 4
+
+
+# -- multiproc tier: locality parity + kill drill ----------------------------
+
+@pytest.mark.multiproc
+def test_two_locality_gateway_streams_match_single_process():
+    trace = [{"at_round": r} for r in ARRIVALS]
+    with _plan(localities=2).compile() as multi:
+        out2 = multi.serve_stream(trace=trace, **_kwargs())
+    assert out2["completed"] == len(ARRIVALS)
+    assert out2["cache"]["pages_live"] == 0
+    base = _baseline_streams(ARRIVALS)       # 1-process, same script
+    assert out2["streams"] == base
+
+
+@pytest.mark.multiproc
+def test_kill_locality_mid_stream_completes_survivors():
+    """SIGKILL a worker while the gateway is streaming: its in-flight
+    stack tasks re-spawn, requests submitted after the kill still
+    complete, and every stream matches the 1-process run."""
+    kw = dict(gen_len=6)
+    with _plan(localities=2).compile() as session:
+        rng = np.random.default_rng(23)
+        prompts = [rng.integers(0, session.cfg.vocab, 16).astype(np.int32)
+                   for _ in range(6)]
+        q = RequestQueue()
+        killed = {}
+
+        def feeder():
+            for i, p in enumerate(prompts):
+                if i == 3:
+                    killed["rank"] = session.kill_locality()
+                q.submit(p)
+                time.sleep(0.05)
+            q.close()
+
+        t = threading.Thread(target=feeder)
+        t.start()
+        out = session.serve_stream(queue=q, **_kwargs(**kw))
+        t.join()
+    assert killed["rank"] is not None
+    assert out["completed"] == len(prompts)
+    assert out["cache"]["pages_live"] == 0
+    base = _stream([{"prompt": p} for p in prompts], **kw)
+    assert out["streams"] == base["streams"]

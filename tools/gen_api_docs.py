@@ -33,14 +33,30 @@ API = [
         "FuturizedGraph.gather", "FuturizedGraph.barrier",
         "FuturizedGraph.stats", "FuturizedGraph.shutdown",
         "FuturizedGraph.add_trace_hook",
+        "FuturizedGraph.record_serve",
         "RuntimeStats", "Pipeline", "hist_labels",
+    ]),
+    ("repro.core.paging", [
+        "PageError",
+        "PagePool", "PagePool.alloc", "PagePool.free",
+        "PagePool.write", "PagePool.read", "PagePool.owners",
+        "PagePool.counters",
+        "InferenceCache", "InferenceCache.put", "InferenceCache.get",
+        "InferenceCache.drop", "InferenceCache.counters",
     ]),
     ("repro.frontend", [
         "Plan", "Plan.compile",
-        "Session", "Session.train", "Session.serve", "Session.dryrun",
+        "Session", "Session.train", "Session.serve",
+        "Session.serve_stream", "Session.dryrun",
         "Session.close", "Session.stats", "Session.kill_locality",
         "Session.add_locality", "Session.lint",
-        "futurize", "tracing", "Trace",
+        "futurize", "tracing", "Trace", "serve_flags",
+    ]),
+    ("repro.frontend.gateway", [
+        "RequestQueue", "RequestQueue.submit", "RequestQueue.close",
+        "RequestHandle", "RequestHandle.result", "RequestHandle.cancel",
+        "Gateway", "Gateway.run",
+        "RequestRejected", "DeadlineExpired",
     ]),
     ("repro.analysis.lint", [
         "Finding", "LintGraph",
@@ -56,7 +72,8 @@ API = [
         "find_cycle", "thread_stacks",
     ]),
     ("repro.analysis.trace_builders", [
-        "train_trace", "serve_trace", "step_contract", "plan_traces",
+        "train_trace", "serve_trace", "gateway_trace", "step_contract",
+        "plan_traces",
     ]),
     ("repro.distrib", [
         "Endpoint", "Endpoint.register", "Endpoint.connect",

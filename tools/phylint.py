@@ -10,6 +10,7 @@ inversion, a dead node, or a donation-after-use hazard fails the build.
 
     python tools/phylint.py --all-configs --strict
     python tools/phylint.py --arch qwen3-4b --variant ddp
+    python tools/phylint.py --arch qwen3-4b --variant serve   # gateway tree
     python tools/phylint.py --list-rules
 """
 from __future__ import annotations
@@ -20,13 +21,17 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-#: Plan variants traced per architecture: standard single-locality,
-#: fabric-DDP shadow, and SPMD shadow (DESIGN.md §10-§11).  DDP/SPMD
-#: builders mirror the driver tree, so localities=2 is representative.
+#: Plan variants traced per architecture: standard single-locality
+#: training, the serving trees (wave serve + the continuous-batching
+#: gateway, DESIGN.md §14), fabric-DDP shadow, and SPMD shadow
+#: (DESIGN.md §10-§11).  DDP/SPMD builders mirror the driver tree, so
+#: localities=2 is representative.  ``workloads`` filters the
+#: ``plan_traces`` output so no tree is linted twice across variants.
 VARIANTS = {
-    "standard": dict(),
-    "ddp": dict(ddp=True, localities=2),
-    "spmd": dict(spmd=True, localities=2),
+    "standard": {"plan": dict(), "workloads": ("train", "step-contract")},
+    "serve": {"plan": dict(), "workloads": ("serve", "gateway")},
+    "ddp": {"plan": dict(ddp=True, localities=2), "workloads": None},
+    "spmd": {"plan": dict(spmd=True, localities=2), "workloads": None},
 }
 
 
@@ -36,8 +41,12 @@ def iter_graphs(arch_ids, variants):
 
     for aid in arch_ids:
         for vname in variants:
-            plan = Plan(arch=aid, tiny=True, **VARIANTS[vname])
+            spec = VARIANTS[vname]
+            plan = Plan(arch=aid, tiny=True, **spec["plan"])
+            keep = spec["workloads"]
             for wname, graph in plan_traces(plan).items():
+                if keep is not None and wname not in keep:
+                    continue
                 yield f"{aid}/{vname}/{wname}", graph
 
 
