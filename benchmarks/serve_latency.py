@@ -10,6 +10,9 @@ Three cells over the same request load:
     request arriving at round 0.
   * ``stream-mid`` - the gateway with staggered mid-flight arrivals
     (requests > slots), the shape the paged cache exists for.
+  * ``stream-x2`` - the stream-mid load over 2 model replicas (DESIGN.md
+    §15): the router spreads requests across two decode chains; steady
+    state must show zero cross-replica page fetches.
 
 Percentiles come from the run's own ``request_latency_hist`` (the
 histograms ``RuntimeStats`` already ships) via linear interpolation
@@ -33,7 +36,7 @@ from pathlib import Path
 
 from repro.frontend.plan import Plan
 
-VERSION = 1
+VERSION = 2
 PHASES = ("queue_wait", "prefill", "decode_token", "total")
 
 
@@ -96,20 +99,27 @@ def run_cells(*, requests: int, slots: int, prompt_len: int, gen_len: int
                     "padded_tokens": wave["padded_tokens"],
                     "tokens_per_s": round(wave["tokens_per_s"], 2)})
 
-    # staggered arrivals land a new request every other decode round
+    # staggered arrivals land a new request every other decode round;
+    # the x2 cell runs the same staggered load across 2 replicas
+    mid_trace = [{"at_round": 2 * (i // slots)} for i in range(requests)]
     stream_cells = [
-        ("stream", [{"at_round": 0} for _ in range(requests)]),
-        ("stream-mid", [{"at_round": 2 * (i // slots)}
-                        for i in range(requests)]),
+        ("stream", [{"at_round": 0} for _ in range(requests)], 1),
+        ("stream-mid", mid_trace, 1),
+        ("stream-x2", mid_trace, 2),
     ]
-    for name, trace in stream_cells:
+    for name, trace, n_replicas in stream_cells:
         with plan.compile() as session:
             out = session.serve_stream(trace=trace, prompt_len=prompt_len,
                                        gen_len=gen_len, slots=slots,
-                                       verbose=False)
+                                       replicas=n_replicas, verbose=False)
         _assert_paging(out)
         serve = out["runtime_stats"]["serve"]
-        cell = {"cell": name, "tokens": out["tokens"],
+        if serve.get("cross_replica_page_fetches", 0) != 0:
+            raise AssertionError(
+                f"{name}: steady state crossed replica page boundaries "
+                f"{serve['cross_replica_page_fetches']}x")
+        cell = {"cell": name, "replicas": n_replicas,
+                "tokens": out["tokens"],
                 "padded_tokens": out["padded_tokens"],
                 "tokens_per_s": round(out["tokens_per_s"], 2),
                 "epochs": out["epochs"], "rounds": out["rounds"],

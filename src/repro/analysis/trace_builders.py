@@ -149,6 +149,25 @@ def serve_trace(
     return g
 
 
+class _TraceReplica:
+    """Static mirror of ``gateway._Replica``: one replica's slot/chain
+    state inside ``gateway_trace`` (node ids instead of futures)."""
+
+    def __init__(self, idx: int, slots: int, namespaced: bool):
+        self.idx = idx
+        self.ns = f"R{idx}:" if namespaced else ""
+        self.admitted: list[int] = []
+        self.residents: list[int | None] = [None] * slots
+        self.carry: int | None = None
+        self.prev_emit: int | None = None
+        self.epoch = -1
+        self.j = 0
+        self.round_work: tuple[bool, list[int]] = (False, [])
+
+    def has_residents(self) -> bool:
+        return any(r is not None for r in self.residents)
+
+
 def gateway_trace(
     plan,
     *,
@@ -157,9 +176,10 @@ def gateway_trace(
     slots: int = 2,
     max_inflight: int | None = None,
     arrivals: list[int] | None = None,
+    replicas: int | None = None,
 ) -> LintGraph:
     """The driver-side tree of ``Session.serve_stream`` (the gateway,
-    DESIGN.md §14) for a fault-free arrival script.
+    DESIGN.md §14/§15) for a fault-free arrival script.
 
     Mirrors ``frontend/gateway.py``'s round loop exactly: per request a
     producer-backed ``request:r{i}`` promise, a PREFETCH ``stack:r{i}``
@@ -167,86 +187,114 @@ def gateway_trace(
     joining the previous decode tail with the joiners' prefills; per
     round a ``decode:e{k}:t{j}`` with a chained CHECKPOINT
     ``emit:e{k}:t{j}``; and a forced ``finish:r{i}`` hanging off the emit
-    that carried the request's last token.
+    that carried the request's last token.  With ``replicas > 1`` the
+    *live* ``ReplicaRouter`` (purely structural: affinity, then least
+    loaded, ties low) is replayed to route requests across N namespaced
+    decode chains (``refill:R1:e{k}``...) - same class, same decisions,
+    so the static tree matches the live one node for node.
 
     Args:
         arrivals: per-request arrival round (submission order); defaults
             to everyone at round 0.  Deadlines/faults are runtime-only -
             lint those via ``LintGraph.from_trace``.
+        replicas: replica count (defaults to ``plan.replicas``).
     """
     if getattr(plan, "localities", 1) > 1:
         raise ValueError(
             "gateway_trace mirrors the single-locality driver tree; lint a "
             "multi-locality run via LintGraph.from_trace / from_graph"
         )
-    g = LintGraph(label=f"gateway[{getattr(plan, 'arch', '?')}]")
+    # lazy: analysis must import without frontend (core.futures imports
+    # the sanitizer, and frontend.gateway imports core.futures)
+    from ..frontend.gateway import ReplicaRouter
+
+    n_rep = replicas if replicas is not None else getattr(plan, "replicas", 1)
+    g = LintGraph(label=f"gateway[{getattr(plan, 'arch', '?')}]"
+                        + (f":x{n_rep}" if n_rep > 1 else ""))
     g.has_forced_info = True
     arrivals = list(arrivals) if arrivals is not None else [0] * requests
     if not arrivals:
         return g
-    cap = max(1, max_inflight if max_inflight is not None else 2 * slots)
+    cap = max(1, max_inflight if max_inflight is not None
+              else 2 * slots * n_rep)
+    router = ReplicaRouter(n_rep)
+    reps = [_TraceReplica(i, slots, namespaced=n_rep > 1)
+            for i in range(n_rep)]
     queued = list(enumerate(arrivals))      # (rid index, at_round), FIFO
     pending: list[int] = []
-    admitted: list[int] = []
-    residents: list[int | None] = [None] * slots
     emitted = {i: 0 for i, _ in queued}
     prefill_of: dict[int, int] = {}
-    carry: int | None = None
-    prev_emit: int | None = None
-    epoch, round_, j = -1, 0, 0
+    round_ = 0
+
+    def inflight() -> int:
+        return sum(len(rep.admitted)
+                   + sum(r is not None for r in rep.residents)
+                   for rep in reps)
+
     while True:
         for i, at in [q for q in queued if q[1] <= round_]:
             queued.remove((i, at))
             g.add(f"request:r{i}", lane="CHECKPOINT", kind="promise",
                   producer="gateway", src="Gateway._register")
             pending.append(i)
-        while pending and (len(admitted)
-                           + sum(r is not None for r in residents)) < cap:
+        while pending and inflight() < cap:
             i = pending.pop(0)
+            ridx = router.assign(f"r{i}")
             s = g.add(f"stack:r{i}", lane="PREFETCH", src="Gateway._admit")
             prefill_of[i] = g.add(f"prefill:r{i}", deps=[s],
                                   src="Gateway._admit")
-            admitted.append(i)
-        changed = False
-        for s, i in enumerate(residents):
-            if i is not None and emitted[i] >= gen_len:
-                g.add(f"finish:r{i}", lane="CHECKPOINT", deps=[prev_emit],
-                      forced=True, src="Gateway run drain")
-                residents[s] = None
+            reps[ridx].admitted.append(i)
+        for rep in reps:
+            changed = False
+            for s, i in enumerate(rep.residents):
+                if i is not None and emitted[i] >= gen_len:
+                    g.add(f"finish:r{i}", lane="CHECKPOINT",
+                          deps=[rep.prev_emit], forced=True,
+                          src="Gateway run drain")
+                    rep.residents[s] = None
+                    router.release(f"r{i}")
+                    changed = True
+            joiners: list[int] = []
+            free = [s for s in range(slots) if rep.residents[s] is None]
+            while free and rep.admitted:
+                i = rep.admitted.pop(0)
+                rep.residents[free.pop(0)] = i
+                joiners.append(i)
                 changed = True
-        joiners: list[int] = []
-        free = [s for s in range(slots) if residents[s] is None]
-        while free and admitted:
-            i = admitted.pop(0)
-            residents[free.pop(0)] = i
-            joiners.append(i)
-            changed = True
-        if all(r is None for r in residents):
+            rep.round_work = (changed, joiners)
+        if not any(rep.has_residents() for rep in reps):
             nxt = min((at for _, at in queued), default=None)
             if nxt is not None:
                 round_ = max(round_ + 1, nxt)
                 continue
             break
-        if changed or carry is None:
-            epoch += 1
-            j = 0
-            # the live trace records dependency edges index-sorted
-            deps = sorted(([] if carry is None else [carry])
-                          + [prefill_of[i] for i in joiners])
-            carry = g.add(f"refill:e{epoch}", deps=deps,
-                          src="Gateway._refill_fn")
-        carry = g.add(f"decode:e{epoch}:t{j}", deps=[carry],
-                      src="Gateway._decode_fn")
-        emit_deps = ([] if prev_emit is None else [prev_emit]) + [carry]
-        prev_emit = g.add(f"emit:e{epoch}:t{j}", lane="CHECKPOINT",
-                          deps=emit_deps, src="Gateway._emit_fn")
-        for i in residents:
-            if i is not None:
-                emitted[i] += 1
-        j += 1
+        for rep in reps:
+            changed, joiners = rep.round_work
+            if not rep.has_residents():
+                continue
+            if changed or rep.carry is None:
+                rep.epoch += 1
+                rep.j = 0
+                # the live trace records dependency edges index-sorted
+                deps = sorted(([] if rep.carry is None else [rep.carry])
+                              + [prefill_of[i] for i in joiners])
+                rep.carry = g.add(f"refill:{rep.ns}e{rep.epoch}",
+                                  deps=deps, src="Gateway._refill_fn")
+            rep.carry = g.add(f"decode:{rep.ns}e{rep.epoch}:t{rep.j}",
+                              deps=[rep.carry], src="Gateway._decode_fn")
+            emit_deps = (([] if rep.prev_emit is None else [rep.prev_emit])
+                         + [rep.carry])
+            rep.prev_emit = g.add(f"emit:{rep.ns}e{rep.epoch}:t{rep.j}",
+                                  lane="CHECKPOINT", deps=emit_deps,
+                                  src="Gateway._emit_fn")
+            for i in rep.residents:
+                if i is not None:
+                    emitted[i] += 1
+            rep.j += 1
         round_ += 1
-    if prev_emit is not None:
-        g.mark_forced(prev_emit)    # run() drains through the tail emit
+    for rep in reps:
+        if rep.prev_emit is not None:
+            g.mark_forced(rep.prev_emit)   # run() drains every emit tail
     return g
 
 
@@ -307,6 +355,9 @@ def plan_traces(plan, *, steps: int = 6, requests: int = 8, gen_len: int = 4, sl
     if not getattr(plan, "ddp", False) and not getattr(plan, "spmd", False):
         out["serve"] = serve_trace(plan, requests=requests, gen_len=gen_len, slots=slots)
         out["gateway"] = gateway_trace(plan, requests=requests, gen_len=gen_len, slots=slots)
+        out["gateway-replicas"] = gateway_trace(
+            plan, requests=requests, gen_len=gen_len, slots=slots,
+            replicas=max(2, getattr(plan, "replicas", 1)))
     return out
 
 

@@ -127,15 +127,20 @@ class RuntimeStats:
             "counts": {lane: [int] * 6},  # counts[i] tasks in labels[i]
           },
           "serve": {counter: int},       # gateway admission/cache counters
+          "serve_replicas": {            # the same counters split by the
+            "0": {counter: int}, ...},   # serve replica that incurred them
           "request_latency_hist": {      # per-request phases, same buckets
             "edges_s": [...], "labels": [...],
             "counts": {phase: [int] * 6},   # phase in REQUEST_PHASES
           },
         }
 
-    ``serve`` and ``request_latency_hist`` are fed by the serving gateway
-    (``frontend/gateway.py``) through ``FuturizedGraph.record_serve``;
-    both serialize as all-zeros for graphs that never serve.
+    ``serve``, ``serve_replicas`` and ``request_latency_hist`` are fed by
+    the serving gateway (``frontend/gateway.py``) through
+    ``FuturizedGraph.record_serve``; all serialize as empty/all-zeros for
+    graphs that never serve.  ``serve_replicas`` keys are string replica
+    indices (JSON-stable) and appear only for counters recorded with
+    ``replica=``.
 
     A task of duration ``d`` lands in the first bucket whose edge exceeds
     ``d``; the last bucket is open-ended.  For scheduler-run tasks the
@@ -160,6 +165,8 @@ class RuntimeStats:
     # serving-gateway counters (admitted/rejected/expired/..., paged-cache
     # hits, padded-slot tokens); open-keyed so the gateway can grow them
     serve: dict = dataclasses.field(default_factory=dict)
+    # the same counters split per serve replica ({"0": {...}, "1": {...}})
+    serve_replicas: dict = dataclasses.field(default_factory=dict)
     # per-request latency, histogrammed by phase over HIST_EDGES_S buckets
     request_hist: dict = dataclasses.field(
         default_factory=lambda: {p: [0] * (len(HIST_EDGES_S) + 1)
@@ -655,20 +662,30 @@ class FuturizedGraph:
                 lane_hist={k: list(v)
                            for k, v in self._stats.lane_hist.items()},
                 serve=dict(self._stats.serve),
+                serve_replicas={k: dict(v) for k, v
+                                in self._stats.serve_replicas.items()},
                 request_hist={k: list(v)
                               for k, v in self._stats.request_hist.items()})
 
     def record_serve(self, *, phase: Optional[str] = None, dt_s: float = 0.0,
-                     **counters: int):
+                     replica: Optional[int] = None, **counters: int):
         """Serving-gateway telemetry sink: bump ``stats().serve`` counters
         by the given keyword amounts and, when ``phase`` is set (one of
         ``REQUEST_PHASES``), add one ``dt_s`` sample to that per-request
-        latency histogram.  Thread-safe; callable from node bodies."""
+        latency histogram.  With ``replica`` set the counters are also
+        recorded under ``stats().serve_replicas[str(replica)]`` - the
+        per-replica split the multi-replica gateway reports.  Thread-safe;
+        callable from node bodies."""
         with self._lock:
             if phase is not None:
                 self._stats.record_request_phase(phase, dt_s)
+            per = (None if replica is None
+                   else self._stats.serve_replicas.setdefault(
+                       str(replica), {}))
             for k, v in counters.items():
                 self._stats.serve[k] = self._stats.serve.get(k, 0) + int(v)
+                if per is not None:
+                    per[k] = per.get(k, 0) + int(v)
 
     def load(self) -> dict[str, int]:
         """Instantaneous queue pressure: ``{"ready": n, "running": n,

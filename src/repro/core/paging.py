@@ -194,23 +194,32 @@ class InferenceCache:
     pages are owned by ``"req:{rid}"`` so cross-request aliasing is a
     ``PageError``, not a corruption.
 
+    A multi-replica gateway gives every replica its own *named* cache
+    over one shared pool: ``name="R0"`` prefixes the owner tag
+    (``"R0:req:{rid}"``), so one replica freeing - or reading - another
+    replica's pages is a ``PageError``, and the only sanctioned
+    cross-replica path is ``transfer`` (which re-owns the pages under
+    the destination cache, the replica-death migration edge).
+
     jax.tree flatten/unflatten is imported lazily so the pool itself
     stays importable without JAX (property tests exercise it raw).
     """
 
     def __init__(self, pool: Optional[PagePool] = None, *,
-                 page_bytes: int = 1 << 16):
+                 page_bytes: int = 1 << 16, name: str = ""):
         self.pool = pool if pool is not None else PagePool(page_bytes)
+        self.name = name
         self._lock = threading.Lock()
         self._entries: dict[str, _Entry] = {}
         self.puts = 0
         self.hits = 0        # successful get()s
         self.misses = 0      # get()/drop() of an absent rid
         self.drops = 0
+        self.transfers_in = 0    # entries adopted from a sibling cache
+        self.transfers_out = 0   # entries handed to a sibling cache
 
-    @staticmethod
-    def _owner(rid: str) -> str:
-        return f"req:{rid}"
+    def _owner(self, rid: str) -> str:
+        return f"{self.name}:req:{rid}" if self.name else f"req:{rid}"
 
     def put(self, rid: str, state: Any) -> int:
         """Park ``state`` (pytree of arrays) for request ``rid``.
@@ -278,6 +287,29 @@ class InferenceCache:
         self.pool.free(entry.pages, self._owner(rid))
         return True
 
+    def transfer(self, rid: str, dst: "InferenceCache") -> bool:
+        """Move ``rid``'s parked state into ``dst`` (bit-identical).
+
+        The only sanctioned cross-cache page path: the state is read
+        under this cache's ownership, the pages are freed, and ``dst``
+        re-parks it under its own owner tag - so the single-owner
+        invariant holds at every instant.  Used by the gateway when a
+        surviving replica adopts a dead replica's requests.
+
+        Returns True if an entry existed (False is a recorded miss, as
+        for ``get``/``drop``).
+        """
+        state = self.get(rid)
+        if state is None:
+            return False
+        self.drop(rid)
+        dst.put(rid, state)
+        with self._lock:
+            self.transfers_out += 1
+        with dst._lock:
+            dst.transfers_in += 1
+        return True
+
     def __contains__(self, rid: str) -> bool:
         with self._lock:
             return rid in self._entries
@@ -295,6 +327,8 @@ class InferenceCache:
         with self._lock:
             out = {"cache_puts": self.puts, "cache_hits": self.hits,
                    "cache_misses": self.misses, "cache_drops": self.drops,
+                   "cache_transfers_in": self.transfers_in,
+                   "cache_transfers_out": self.transfers_out,
                    "cache_entries": len(self._entries)}
         out.update(self.pool.counters())
         return out

@@ -778,6 +778,14 @@ class DistributedGraph:
         return self._graph
 
     # -- placement -----------------------------------------------------------
+    def alive_localities(self) -> list[int]:
+        """Live locality ranks, the driver (rank 0, always alive) first.
+
+        The serve gateway homes its model replicas over this list and
+        polls it each round to detect a replica whose host locality died
+        (``frontend/gateway.py``, DESIGN.md §15)."""
+        return [0] + self.group.alive_workers()
+
     def _pick(self, lane: Lane, argskw,
               locality: Optional[int]) -> tuple[int, bool]:
         """Choose a target rank; the second element says whether the

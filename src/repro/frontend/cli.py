@@ -91,6 +91,24 @@ def serve_flags(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:
                          "a decode slot when it lapses expires cleanly "
                          "(its node chain is cancelled and its pages "
                          "reclaimed)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="model replica count for --serve-stream "
+                         "(DESIGN.md §15): each replica is a prefill/"
+                         "decode pair homed on its own locality, and the "
+                         "gateway router assigns every request to "
+                         "exactly one (page affinity first); streams are "
+                         "bit-identical to --replicas 1")
+    ap.add_argument("--kill-replica-at", dest="kill_replica_at",
+                    default=None, metavar="IDX:ROUND",
+                    help="replica-death drill for --serve-stream: mark "
+                         "replica IDX dead at decode round ROUND; "
+                         "survivors absorb its queued and in-flight "
+                         "requests (e.g. 0:2)")
+    ap.add_argument("--stats-out", dest="stats_out", default=None,
+                    metavar="FILE",
+                    help="write the serve summary (gateway counters, "
+                         "per-replica split, latency histograms) as JSON "
+                         "to FILE - the CI drills assert on it")
     return ap
 
 
@@ -101,7 +119,7 @@ def plan_from_args(args, **overrides) -> Plan:
               for name in ("arch", "tiny", "data", "model", "batch", "seq",
                            "seed", "localities", "spmd", "ddp",
                            "grad_codec", "ddp_shards", "elastic",
-                           "elastic_port")
+                           "elastic_port", "replicas")
               if hasattr(args, name)}
     if hasattr(args, "ckpt"):       # --ckpt -> Plan.ckpt_dir, so worker
         fields["ckpt_dir"] = args.ckpt   # localities get it at spawn

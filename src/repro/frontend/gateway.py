@@ -34,10 +34,23 @@ Graph shape per request i (epoch k = one slot-membership period)::
                                           decode:e{k}:t{j} -> emit:e{k}:t{j}
     emit chain (prev emit -> next emit) ... -> finish:r{i} => request:r{i}
 
-Token streams are *bit-identical* across co-tenancy: prefill is batch=1,
-decode math is row-independent (one-hot cache writes, per-row masks and
-argmax), so a request's stream depends only on its prompt - the property
-the fault-injection and multiproc parity tests pin down.
+With ``replicas=N`` (DESIGN.md §15) the gateway drives N model replicas -
+each a prefill/decode pair with its own decode chain, slot accounting and
+*named* ``InferenceCache`` over one shared ``PagePool`` - and a
+``ReplicaRouter`` assigns every admitted request to exactly one replica:
+page affinity first (the replica already holding its pages), then least
+loaded, ties to the lowest index.  Epoch-scoped nodes are namespaced
+(``refill:R1:e{k}``...); request-scoped names are unchanged.  When a
+replica's home locality dies, its requests migrate to survivors and the
+surviving refill *adopts* the dead replica's pages (a counted
+``cross_replica_page_fetches``, zero in steady state) - prefill is never
+recomputed.
+
+Token streams are *bit-identical* across co-tenancy AND across replica
+counts: prefill is batch=1, decode math is row-independent (one-hot cache
+writes, per-row masks and argmax), so a request's stream depends only on
+its prompt - the property the fault-injection, multiproc parity and
+replica-drill tests pin down.
 """
 from __future__ import annotations
 
@@ -53,10 +66,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.futures import FuturizedGraph, Lane
-from ..core.paging import InferenceCache
+from ..core.paging import InferenceCache, PagePool
 
-__all__ = ["DeadlineExpired", "Gateway", "RequestHandle", "RequestQueue",
-           "RequestRejected"]
+__all__ = ["DeadlineExpired", "Gateway", "ReplicaRouter", "RequestHandle",
+           "RequestQueue", "RequestRejected"]
 
 
 class RequestRejected(RuntimeError):
@@ -105,6 +118,8 @@ class RequestHandle:
         self._stack = None
         self._prefill = None
         self._first: Optional[int] = None       # prefill token
+        self._prefill_forced = False            # first token already appended
+        self._replica: Optional[int] = None     # routed replica index
 
     def done(self) -> bool:
         return self._done.is_set()
@@ -198,21 +213,132 @@ class RequestQueue:
         with self._lock:
             return min((h.at_round for h in self._items), default=None)
 
-    def wait_nonempty(self, timeout: float) -> bool:
-        """Block up to ``timeout`` for a submission or ``close()``."""
+    def drained(self) -> bool:
+        """Closed AND empty, checked atomically - the gateway's only
+        exit test.  A ``submit`` racing ``close()`` either lands in the
+        backlog before the close (this stays False until the gateway
+        takes it) or is deterministically rejected by ``submit``; a
+        non-atomic closed-then-empty check could observe the close, miss
+        the racing item, and strand its handle in ``queued`` forever."""
+        with self._lock:
+            return self.closed and not self._items
+
+    def wait_nonempty(self, timeout: Optional[float] = None) -> bool:
+        """Block for a submission or ``close()`` (``timeout=None`` waits
+        indefinitely - the idle gateway parks here and ``submit``/
+        ``close`` notify the condition variable, instead of the 20 Hz
+        poll that used to add up to 50 ms of queue latency)."""
         with self._cv:
             return self._cv.wait_for(
                 lambda: self._items or self.closed, timeout)
 
 
+class ReplicaRouter:
+    """Pure routing state for the replica pool (no JAX, no threads - the
+    property tests drive it with seeded event soups, and the phylint
+    static mirror replays it to predict the live tree).
+
+    Rules (DESIGN.md §15):
+
+      * **Affinity.**  A request already assigned to a live replica stays
+        there: its prefill state is parked in that replica's pages, so
+        moving it would turn a page hit into cross-replica traffic.
+        ``assign`` on a routed rid is therefore idempotent across
+        retire/refill.
+      * **Least loaded.**  A new request goes to the live replica with
+        the fewest routed requests, ties to the lowest index - purely
+        structural, so a static mirror reaches the same decision.
+      * **Death.**  ``kill`` marks a replica dead and returns its routed
+        rids (in routing order) for re-assignment; a request is never
+        assigned to two replicas at once and never stranded while any
+        replica is alive (``assign`` raises only on an empty pool).
+    """
+
+    def __init__(self, replicas: int):
+        if replicas < 1:
+            raise ValueError(f"need >= 1 replica, got {replicas}")
+        self.replicas = replicas
+        self.live: set[int] = set(range(replicas))
+        self.assignment: dict[str, int] = {}
+
+    def load(self, replica: int) -> int:
+        """Requests currently routed to ``replica``."""
+        return sum(1 for r in self.assignment.values() if r == replica)
+
+    def assign(self, rid: str) -> int:
+        """Route ``rid`` (idempotent while its replica is alive)."""
+        cur = self.assignment.get(rid)
+        if cur is not None and cur in self.live:
+            return cur                       # page affinity: stay put
+        if not self.live:
+            raise RuntimeError("no live replicas to route to")
+        r = min(self.live, key=lambda i: (self.load(i), i))
+        self.assignment[rid] = r
+        return r
+
+    def release(self, rid: str):
+        """Forget a terminal request's routing."""
+        self.assignment.pop(rid, None)
+
+    def kill(self, replica: int) -> list[str]:
+        """Mark ``replica`` dead; its routed rids, in routing order,
+        ready to be re-``assign``-ed to survivors."""
+        self.live.discard(replica)
+        return [rid for rid, r in self.assignment.items() if r == replica]
+
+    def revive(self, replica: int):
+        """Return a replica to the live pool (re-homed or re-spawned)."""
+        if not 0 <= replica < self.replicas:
+            raise ValueError(f"unknown replica {replica}")
+        self.live.add(replica)
+
+
+class _Replica:
+    """Driver-side state of one serve replica: its own named page cache
+    (over the gateway's shared pool), admitted queue, slot residents and
+    decode chain.  ``ns`` prefixes epoch-scoped node names so N decode
+    chains coexist in one graph (empty for a single-replica gateway -
+    the PR-9 names are unchanged)."""
+
+    def __init__(self, idx: int, home: int, slots: int, pool: PagePool,
+                 namespaced: bool):
+        self.idx = idx
+        self.home = home                    # host locality rank (0=driver)
+        self.alive = True
+        self.ns = f"R{idx}:" if namespaced else ""
+        self.icache = InferenceCache(pool,
+                                     name=f"R{idx}" if namespaced else "")
+        self.admitted: collections.deque = collections.deque()
+        self.residents: list[Optional[RequestHandle]] = [None] * slots
+        self.carry = None                   # decode chain carry future
+        self.prev_emit = None               # emit chain tail
+        self.emit_hist: collections.deque = collections.deque()
+        self.epoch = -1
+        self.j = 0
+        self.round_work = (False, [])       # (changed, joiners) this round
+
+    def has_residents(self) -> bool:
+        return any(r is not None for r in self.residents)
+
+
 class Gateway:
     """The continuous-batching driver (one ``run()`` per instance).
 
-    Owns the paged ``InferenceCache``, the request registry and the
+    Owns the shared ``PagePool`` (one named ``InferenceCache`` per
+    replica), the ``ReplicaRouter``, the request registry and the
     fault/tombstone accounting; emits every admission/cache counter and
     per-request latency histogram into ``runtime.stats()`` via
-    ``record_serve``.  Built by ``Session.serve_stream``, which supplies
-    the jitted batch=1 prefill step and the ``slots``-wide decode step.
+    ``record_serve`` (per-replica split included).  Built by
+    ``Session.serve_stream``, which supplies the jitted batch=1 prefill
+    step and the ``slots``-wide decode step - both shared across
+    replicas (same shapes, same seed: params are replicated, which is
+    what keeps N-replica streams bit-identical to one replica).
+
+    ``replicas``/``homes`` place each replica's host-side request prep
+    (``stack`` nodes) on its home locality via ``DistributedGraph``
+    placement; homes default to cycling over the live worker ranks then
+    the driver.  ``kill_replica_at_round`` is the deterministic
+    replica-death drill seam; ``kill_replica()`` is the live one.
     """
 
     def __init__(self, runtime: FuturizedGraph, *, distributed=None,
@@ -220,9 +346,13 @@ class Gateway:
                  gen_len: int, slots: int,
                  max_inflight: Optional[int] = None,
                  deadline_ms: Optional[float] = None,
-                 page_bytes: int = 1 << 16, lookahead: int = 2):
+                 page_bytes: int = 1 << 16, lookahead: int = 2,
+                 replicas: int = 1, homes: Optional[list[int]] = None,
+                 kill_replica_at_round: Optional[tuple] = None):
         if gen_len < 1:
             raise ValueError("gen_len must be >= 1")
+        if replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got {replicas}")
         self.runtime = runtime
         self.distributed = distributed
         self.pre = prefill_step
@@ -232,15 +362,40 @@ class Gateway:
         self.gen_len = gen_len
         self.slots = slots
         self.max_inflight = max(1, max_inflight if max_inflight is not None
-                                else 2 * slots)
+                                else 2 * slots * replicas)
         self.default_deadline_s = (None if deadline_ms is None
                                    else deadline_ms / 1e3)
         self.lookahead = max(1, lookahead)
-        self.icache = InferenceCache(page_bytes=page_bytes)
+        if homes is None:
+            homes = self._default_homes(replicas)
+        elif len(homes) != replicas:
+            raise ValueError(f"homes={homes} must name one locality per "
+                             f"replica ({replicas})")
+        self.pool = PagePool(page_bytes)
+        self.replicas = [_Replica(i, homes[i], slots, self.pool,
+                                  namespaced=replicas > 1)
+                         for i in range(replicas)]
+        self.router = ReplicaRouter(replicas)
+        # single-replica alias (the PR-9 surface tests/benchmarks use)
+        self.icache = self.replicas[0].icache
         self.tok_sh = decode_step.batch_shardings["tokens"]
         self._lock = threading.Lock()
         self._handles: dict[str, RequestHandle] = {}
         self._tombstones: set[str] = set()
+        self._killed: set[int] = set()      # kill_replica() drill marks
+        self._kill_at = (tuple(kill_replica_at_round)
+                         if kill_replica_at_round is not None else None)
+
+    def _default_homes(self, replicas: int) -> list[int]:
+        """Cycle replicas over live worker localities, then the driver -
+        so with 2 replicas on 2 localities, killing the worker kills
+        exactly replica 0 and the driver-homed replica survives.  A
+        single replica (or a single-process run) stays on the driver."""
+        if self.distributed is None or replicas == 1:
+            return [0] * replicas
+        workers = [r for r in self.distributed.alive_localities() if r != 0]
+        ranks = workers + [0] if workers else [0]
+        return [ranks[i % len(ranks)] for i in range(replicas)]
 
     # -- request lifecycle ---------------------------------------------------
     def _register(self, h: RequestHandle):
@@ -252,11 +407,23 @@ class Gateway:
         with self._lock:
             self._handles[h.rid] = h
 
-    def _admit(self, h: RequestHandle):
+    def _admit(self, h: RequestHandle) -> _Replica:
+        """Route to a replica, then launch the request's prefill chain;
+        its ``stack`` prep is pinned to the replica's home locality."""
+        h._replica = self.router.assign(h.rid)
+        rep = self.replicas[h._replica]
         if self.distributed is not None:
-            h._stack = self.distributed.defer(
-                _stack_request, h.prompt, lane=Lane.PREFETCH,
-                name=f"stack:{h.rid}")
+            pin = rep.home if len(self.replicas) > 1 else None
+            try:
+                h._stack = self.distributed.defer(
+                    _stack_request, h.prompt, lane=Lane.PREFETCH,
+                    name=f"stack:{h.rid}", locality=pin)
+            except ValueError:
+                # the home died between the liveness sweep and this defer:
+                # place anywhere; the next sweep migrates the replica
+                h._stack = self.distributed.defer(
+                    _stack_request, h.prompt, lane=Lane.PREFETCH,
+                    name=f"stack:{h.rid}")
         else:
             h._stack = self.runtime.defer(
                 _stack_request, h.prompt, lane=Lane.PREFETCH,
@@ -264,7 +431,8 @@ class Gateway:
         h._prefill = self.runtime.defer(self._prefill_fn(h), h._stack,
                                         name=f"prefill:{h.rid}")
         h.status = "admitted"
-        self.runtime.record_serve(admitted=1)
+        self.runtime.record_serve(admitted=1, replica=h._replica)
+        return rep
 
     def _prefill_fn(self, h: RequestHandle):
         def prefill(arr):
@@ -283,10 +451,20 @@ class Gateway:
             with self._lock:
                 if h.rid in self._tombstones:   # dropped while running:
                     return first                 # park nothing, leak nothing
-                self.icache.put(h.rid, state)
+                # park into the request's *current* replica: a migration
+                # mid-prefill parks into the old cache and the new
+                # replica's refill adopts the pages cross-replica
+                self.replicas[h._replica].icache.put(h.rid, state)
                 h._last_t = time.perf_counter()
             return first
         return prefill
+
+    def _drop_pages(self, rid: str):
+        """Free ``rid``'s pages wherever they are parked (a migrated
+        request's pages may sit in its old replica's cache)."""
+        for rep in self.replicas:
+            if rid in rep.icache:
+                rep.icache.drop(rid)
 
     def _resolve(self, h: RequestHandle, status: str,
                  exc: Optional[BaseException], counter: str):
@@ -302,6 +480,9 @@ class Gateway:
                     h._promise.set_exception(
                         exc, cancelled=isinstance(exc, CancelledError))
             h._done.set()
+        # pages are retained until the request is terminal (migration
+        # replays decode from the parked state); reclaim is here, total
+        self._drop_pages(h.rid)
         self.runtime.record_serve(**{counter: 1})
 
     def _kill_admitted(self, h: RequestHandle, exc: BaseException,
@@ -317,7 +498,7 @@ class Gateway:
             h._prefill.add_done_callback(lambda f: None)
         with self._lock:
             self._tombstones.add(h.rid)
-            self.icache.drop(h.rid)
+        self._drop_pages(h.rid)
         self._resolve(h, status, exc, counter)
 
     def _expired(self, h: RequestHandle, now: float) -> bool:
@@ -327,7 +508,9 @@ class Gateway:
 
     def _force_prefill(self, h: RequestHandle) -> bool:
         """Block for the request's prefill before giving it a slot; on
-        failure (poison, upstream cancel) reclaim and report False."""
+        failure (poison, upstream cancel) reclaim and report False.
+        Idempotent on the token stream: a migrated request re-joining a
+        surviving replica's slot does not re-append its first token."""
         try:
             h._first = h._prefill.result()
         except BaseException as e:  # noqa: BLE001 - resolved into the handle
@@ -336,8 +519,10 @@ class Gateway:
                                 "cancelled" if cancelled else "failed",
                                 "cancelled" if cancelled else "failed")
             return False
-        with self._lock:
-            h.tokens.append(h._first)
+        if not h._prefill_forced:
+            h._prefill_forced = True
+            with self._lock:
+                h.tokens.append(h._first)
         return True
 
     # -- device-side node bodies --------------------------------------------
@@ -358,19 +543,30 @@ class Gateway:
         first = int(np.asarray(jnp.argmax(logits, -1))[0])
         return jax.tree.map(np.asarray, cache1), first
 
-    def _refill_fn(self, joins: tuple):
+    def _refill_fn(self, rep: _Replica, joins: tuple):
         def refill(carry, *firsts):
             tok, cache = carry if carry is not None else self._fresh_carry()
             for (slot, rid), first in zip(joins, firsts):
                 with self._lock:
-                    state = self.icache.get(rid)
-                    if state is not None:
-                        self.icache.drop(rid)   # device-resident from here
+                    state = rep.icache.get(rid)
+                    if state is None:
+                        # the pages may be parked under another replica
+                        # (this request migrated off a dead one): adopt
+                        # them - a fetch, never a recompute
+                        for other in self.replicas:
+                            if other is not rep and rid in other.icache:
+                                other.icache.transfer(rid, rep.icache)
+                                state = rep.icache.get(rid)
+                                self.runtime.record_serve(
+                                    cross_replica_page_fetches=1,
+                                    replica=rep.idx)
+                                break
                 if state is None:
-                    self.runtime.record_serve(prefill_recompute=1)
+                    self.runtime.record_serve(prefill_recompute=1,
+                                              replica=rep.idx)
                     state, first = self._recompute(rid)
                 else:
-                    self.runtime.record_serve(page_hits=1)
+                    self.runtime.record_serve(page_hits=1, replica=rep.idx)
 
                 def scatter(c, s, sp, slot=slot):
                     ax = sp.dims.index("batch")
@@ -380,7 +576,7 @@ class Gateway:
                 cache = jax.tree.map(scatter, cache, state,
                                      self.dec.cache_specs)
                 tok = tok.at[slot, 0].set(first)
-                self.runtime.record_serve(refills=1)
+                self.runtime.record_serve(refills=1, replica=rep.idx)
             tok = jax.device_put(tok, self.tok_sh)
             cache = jax.device_put(cache, self.dec.cache_shardings)
             return tok, cache
@@ -393,13 +589,15 @@ class Gateway:
             jnp.argmax(logits, -1)[:, None].astype(jnp.int32), self.tok_sh)
         return tok, cache
 
-    def _emit_fn(self, live_rows: tuple):
+    def _emit_fn(self, rep: _Replica, live_rows: tuple):
         def emit(carry, *_prev_emit):
             tokv = np.asarray(carry[0])[:, 0]   # forces the transfer
             now = time.perf_counter()
             with self._lock:
                 for slot, rid in live_rows:
                     h = self._handles[rid]
+                    if h._replica != rep.idx:   # migrated off mid-round:
+                        continue                 # the token is stale
                     h.tokens.append(int(tokv[slot]))
                     if h._last_t is not None:
                         self.runtime.record_serve(
@@ -407,7 +605,8 @@ class Gateway:
                     h._last_t = now
             self.runtime.record_serve(
                 real_tokens=len(live_rows),
-                padded_slot_tokens=self.slots - len(live_rows))
+                padded_slot_tokens=self.slots - len(live_rows),
+                replica=rep.idx)
         return emit
 
     def _finish_fn(self, h: RequestHandle, cancelled: bool):
@@ -421,6 +620,92 @@ class Gateway:
                 self._resolve(h, "done", None, "completed")
         return finish
 
+    # -- replica liveness ----------------------------------------------------
+    def kill_replica(self, idx: int):
+        """Drill seam: mark replica ``idx`` dead; the next round's
+        liveness sweep retires it and migrates its requests to the
+        survivors.  Thread-safe (a feeder thread may call it mid-run)."""
+        if not 0 <= idx < len(self.replicas):
+            raise ValueError(f"unknown replica {idx}")
+        self._killed.add(idx)
+
+    def _sweep_dead_replicas(self, round_: int):
+        """Retire replicas whose home locality died (or that a drill
+        killed) and migrate everything they held to the survivors."""
+        if self._kill_at is not None and round_ >= self._kill_at[1]:
+            self._killed.add(int(self._kill_at[0]))
+            self._kill_at = None
+        alive_ranks = (set(self.distributed.alive_localities())
+                       if self.distributed is not None else None)
+        for rep in self.replicas:
+            if not rep.alive:
+                continue
+            home_lost = (alive_ranks is not None and rep.home != 0
+                         and rep.home not in alive_ranks
+                         and len(self.replicas) > 1)
+            if rep.idx in self._killed or home_lost:
+                self._retire_replica(rep)
+
+    def _retire_replica(self, rep: _Replica):
+        """Replica-death rebalance (DESIGN.md §15): land the dead
+        replica's in-flight emits, rewind its residents' streams to the
+        prefill token, and re-route everything it held - the survivors'
+        refill adopts its pages via a cross-replica fetch and replays
+        decode from the parked state, so the final streams are
+        bit-identical and prefill never recomputes."""
+        rep.alive = False
+        self.router.kill(rep.idx)
+        # force the emit chain first so stale in-flight token appends
+        # land before the stream rewind below (order matters)
+        if rep.prev_emit is not None:
+            try:
+                rep.prev_emit.result()
+            except BaseException:  # noqa: BLE001 - chain died with replica
+                pass
+        movers = list(rep.admitted) + [h for h in rep.residents
+                                       if h is not None]
+        rep.admitted.clear()
+        rep.residents = [None] * self.slots
+        rep.carry = None
+        rep.prev_emit = None
+        rep.emit_hist.clear()
+        self.runtime.record_serve(replica_deaths=1)
+        if not self.router.live:
+            # last replica standing died: revive it homed on the driver
+            # so queued work is never stranded
+            rep.home = 0
+            rep.alive = True
+            self._killed.discard(rep.idx)
+            self.router.revive(rep.idx)
+            self.runtime.record_serve(replica_revivals=1)
+        for h in movers:
+            if h._done.is_set():
+                self.router.release(h.rid)
+                continue
+            with self._lock:
+                if h._first is not None:
+                    # rewind to the prefill token: the adopting replica
+                    # replays decode from the parked page state
+                    h.tokens = [h._first]
+                h._emitted = 0
+                h._slot = None
+                h._last_t = None
+                h.status = "admitted"
+            target = self.router.assign(h.rid)
+            h._replica = target
+            self.replicas[target].admitted.append(h)
+            self.runtime.record_serve(replica_migrations=1, replica=target)
+
+    def _cache_counters(self) -> dict:
+        """Cache counters summed across replicas + the shared pool's."""
+        out: dict = {}
+        for rep in self.replicas:
+            for k, v in rep.icache.counters().items():
+                if k.startswith("cache_"):
+                    out[k] = out.get(k, 0) + v
+        out.update(self.pool.counters())
+        return out
+
     # -- the driver ----------------------------------------------------------
     def run(self, queue: RequestQueue) -> dict:
         """Drive the gateway until the queue closes and everything in
@@ -429,23 +714,20 @@ class Gateway:
         ``runtime.stats()``."""
         runtime = self.runtime
         pending: collections.deque[RequestHandle] = collections.deque()
-        admitted: collections.deque[RequestHandle] = collections.deque()
-        residents: list[Optional[RequestHandle]] = [None] * self.slots
         intake: list[RequestHandle] = []
         finishes = []
-        emit_hist: collections.deque = collections.deque()
-        carry = None
-        prev_emit = None
-        epoch = -1
         round_ = 0
-        j = 0
 
         def inflight() -> int:
-            return len(admitted) + sum(r is not None for r in residents)
+            return sum(len(rep.admitted)
+                       + sum(r is not None for r in rep.residents)
+                       for rep in self.replicas)
 
         try:
             while True:
                 now = time.perf_counter()
+                # 0. liveness: retire dead replicas, migrate their work
+                self._sweep_dead_replicas(round_)
                 # 1. ingest arrivals whose round has come
                 for h in queue.take_ready(round_):
                     self._register(h)
@@ -461,99 +743,118 @@ class Gateway:
                         pending.remove(h)
                         self._resolve(h, "expired",
                                       DeadlineExpired(h.rid), "expired")
-                # 3. admission: launch prefill chains up to max_inflight
+                # 3. admission: route + launch prefill chains up to the cap
                 while pending and inflight() < self.max_inflight:
                     h = pending.popleft()
-                    self._admit(h)
-                    admitted.append(h)
+                    rep = self._admit(h)
+                    rep.admitted.append(h)
                 # 4. admitted-side faults: cancel/expiry mid-prefill,
                 #    poisoned chains detected as soon as they are terminal
-                for h in list(admitted):
-                    exc = None
-                    if h._cancel_requested:
-                        exc, status = CancelledError(h.rid), "cancelled"
-                    elif self._expired(h, now):
-                        exc, status = DeadlineExpired(h.rid), "expired"
-                    elif (h._prefill.done()
-                          and h._prefill.exception() is not None):
-                        exc, status = h._prefill.exception(), "failed"
-                    if exc is not None:
-                        admitted.remove(h)
-                        self._kill_admitted(h, exc, status, status)
-                # 5. retire residents that finished or were cancelled
-                changed = False
-                for s, h in enumerate(residents):
-                    if h is None:
+                for rep in self.replicas:
+                    for h in list(rep.admitted):
+                        exc = None
+                        if h._cancel_requested:
+                            exc, status = CancelledError(h.rid), "cancelled"
+                        elif self._expired(h, now):
+                            exc, status = DeadlineExpired(h.rid), "expired"
+                        elif (h._prefill.done()
+                              and h._prefill.exception() is not None):
+                            exc, status = h._prefill.exception(), "failed"
+                        if exc is not None:
+                            rep.admitted.remove(h)
+                            self.router.release(h.rid)
+                            self._kill_admitted(h, exc, status, status)
+                # 5/6 per replica: retire finished residents, fill free
+                #     slots from its admitted queue (prefill forced first:
+                #     a slot is only ever given a request whose state is
+                #     already parked in pages)
+                for rep in self.replicas:
+                    if not rep.alive:
+                        rep.round_work = (False, [])
                         continue
-                    cancelled = (h._cancel_requested
-                                 or (h.cancel_after is not None
-                                     and h._emitted >= h.cancel_after))
-                    if cancelled or h._emitted >= self.gen_len:
-                        fin = runtime.defer(
-                            self._finish_fn(h, cancelled), prev_emit,
-                            lane=Lane.CHECKPOINT, name=f"finish:{h.rid}")
-                        finishes.append(fin)
-                        residents[s] = None
+                    changed = False
+                    for s, h in enumerate(rep.residents):
+                        if h is None:
+                            continue
+                        cancelled = (h._cancel_requested
+                                     or (h.cancel_after is not None
+                                         and h._emitted >= h.cancel_after))
+                        if cancelled or h._emitted >= self.gen_len:
+                            fin = runtime.defer(
+                                self._finish_fn(h, cancelled), rep.prev_emit,
+                                lane=Lane.CHECKPOINT,
+                                name=f"finish:{h.rid}")
+                            finishes.append(fin)
+                            rep.residents[s] = None
+                            self.router.release(h.rid)
+                            changed = True
+                    joiners = []
+                    free = [s for s in range(self.slots)
+                            if rep.residents[s] is None]
+                    while free and rep.admitted:
+                        h = rep.admitted.popleft()
+                        if not self._force_prefill(h):
+                            self.router.release(h.rid)
+                            continue
+                        s = free.pop(0)
+                        h._slot, h.status = s, "active"
+                        rep.residents[s] = h
+                        joiners.append((s, h))
                         changed = True
-                # 6. fill free slots from the admitted queue (prefill is
-                #    forced first: a slot is only ever given a request
-                #    whose state is already parked in pages)
-                joiners = []
-                free = [s for s in range(self.slots) if residents[s] is None]
-                while free and admitted:
-                    h = admitted.popleft()
-                    if not self._force_prefill(h):
-                        continue
-                    s = free.pop(0)
-                    h._slot, h.status = s, "active"
-                    residents[s] = h
-                    joiners.append((s, h))
-                    changed = True
-                # 7. nothing resident: fast-forward to the next arrival,
-                #    wait for live traffic, or drain out
-                if all(r is None for r in residents):
+                    rep.round_work = (changed, joiners)
+                # 7. nothing resident anywhere: fast-forward to the next
+                #    arrival, block on the queue CV, or drain out
+                if not any(rep.has_residents() for rep in self.replicas):
                     nxt = queue.next_round()
                     if nxt is not None:
                         round_ = max(round_ + 1, nxt)
                         continue
-                    if not queue.closed:
-                        queue.wait_nonempty(0.05)
-                        round_ += 1
+                    if queue.drained():
+                        break
+                    queue.wait_nonempty()   # CV: submit()/close() wakes us
+                    round_ += 1
+                    continue
+                # 8/9 per replica with residents: cut an epoch on
+                #     membership change (load pages), then one decode
+                #     round with per-slot positions and a chained emit
+                for rep in self.replicas:
+                    changed, joiners = rep.round_work
+                    if not rep.has_residents():
                         continue
-                    break
-                # 8. membership changed: cut an epoch, load pages
-                if changed or carry is None:
-                    epoch += 1
-                    j = 0
-                    joins = tuple((s, h.rid) for s, h in joiners)
-                    carry = runtime.defer(
-                        self._refill_fn(joins), carry,
-                        *[h._prefill for _, h in joiners],
-                        name=f"refill:e{epoch}")
-                # 9. one decode round: per-slot positions, chained emit
-                live_rows = tuple((h._slot, h.rid)
-                                  for h in residents if h is not None)
-                pos = np.full(self.slots, self.prompt_len, np.int32)
-                for s, rid in live_rows:
-                    pos[s] = self.prompt_len + self._handles[rid]._emitted
-                carry = runtime.defer(self._decode_fn, carry,
-                                      jnp.asarray(pos),
-                                      name=f"decode:e{epoch}:t{j}")
-                emit_deps = (carry,) if prev_emit is None \
-                    else (carry, prev_emit)
-                prev_emit = runtime.defer(self._emit_fn(live_rows),
-                                          *emit_deps, lane=Lane.CHECKPOINT,
-                                          name=f"emit:e{epoch}:t{j}")
-                emit_hist.append(prev_emit)
-                if len(emit_hist) > self.lookahead:   # bound the lead so
-                    emit_hist.popleft().result()      # faults/arrivals land
-                for _, rid in live_rows:
-                    self._handles[rid]._emitted += 1
-                j += 1
+                    if changed or rep.carry is None:
+                        rep.epoch += 1
+                        rep.j = 0
+                        joins = tuple((s, h.rid) for s, h in joiners)
+                        rep.carry = runtime.defer(
+                            self._refill_fn(rep, joins), rep.carry,
+                            *[h._prefill for _, h in joiners],
+                            name=f"refill:{rep.ns}e{rep.epoch}")
+                    live_rows = tuple((h._slot, h.rid)
+                                      for h in rep.residents if h is not None)
+                    pos = np.full(self.slots, self.prompt_len, np.int32)
+                    for s, rid in live_rows:
+                        pos[s] = self.prompt_len \
+                            + self._handles[rid]._emitted
+                    rep.carry = runtime.defer(
+                        self._decode_fn, rep.carry, jnp.asarray(pos),
+                        name=f"decode:{rep.ns}e{rep.epoch}:t{rep.j}")
+                    emit_deps = (rep.carry,) if rep.prev_emit is None \
+                        else (rep.carry, rep.prev_emit)
+                    rep.prev_emit = runtime.defer(
+                        self._emit_fn(rep, live_rows), *emit_deps,
+                        lane=Lane.CHECKPOINT,
+                        name=f"emit:{rep.ns}e{rep.epoch}:t{rep.j}")
+                    rep.emit_hist.append(rep.prev_emit)
+                    if len(rep.emit_hist) > self.lookahead:  # bound the
+                        rep.emit_hist.popleft().result()     # lead so
+                    for _, rid in live_rows:                 # faults land
+                        self._handles[rid]._emitted += 1
+                    rep.j += 1
                 round_ += 1
-            # drain: force the emit chain tail and every finish node
-            if prev_emit is not None:
-                prev_emit.result()
+            # drain: force every replica's emit tail and every finish node
+            for rep in self.replicas:
+                if rep.prev_emit is not None:
+                    rep.prev_emit.result()
             for fin in finishes:
                 fin.result()
         finally:
@@ -566,7 +867,7 @@ class Gateway:
                                                f"{h.rid} in flight"),
                                   "failed")
         self.runtime.record_serve(rejected=queue.rejected,
-                                  **self.icache.counters())
+                                  **self._cache_counters())
         counts = collections.Counter(h.status for h in intake)
         return {"handles": intake,
                 "streams": {h.rid: list(h.tokens) for h in intake},
@@ -575,5 +876,9 @@ class Gateway:
                 "expired": counts.get("expired", 0),
                 "failed": counts.get("failed", 0),
                 "rejected": queue.rejected,
-                "rounds": round_, "epochs": epoch + 1,
-                "cache": self.icache.counters()}
+                "rounds": round_,
+                "epochs": sum(rep.epoch + 1 for rep in self.replicas),
+                "replicas": len(self.replicas),
+                "replica_assignments": {h.rid: h._replica for h in intake
+                                        if h._replica is not None},
+                "cache": self._cache_counters()}

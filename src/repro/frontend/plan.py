@@ -120,6 +120,12 @@ class Plan:
             1-process run can scale out.
         elastic_port: fixed driver listen port for ``--join`` dialers
             (0 = ephemeral; only meaningful with ``elastic=True``).
+        replicas: ``serve_stream`` model replicas (DESIGN.md §15).  Each
+            replica is a prefill/decode pair with its own slots and
+            named page cache, homed on its own locality when
+            ``localities > 1``; the gateway router assigns every request
+            to exactly one replica (page affinity first).  Token streams
+            are bit-identical across replica counts.
         overrides: config field overrides applied last.
     """
     arch: str = "qwen3-4b"
@@ -142,6 +148,7 @@ class Plan:
     ckpt_dir: str = ""                   # shared checkpoint dir (§10)
     elastic: bool = False                # dial-in joins + stealing (§13)
     elastic_port: int = 0                # --join listen port (0 = any)
+    replicas: int = 1                    # serve_stream model replicas (§15)
     overrides: dict = dataclasses.field(default_factory=dict)
 
     # -- resolution ---------------------------------------------------------
@@ -963,6 +970,8 @@ class Session:
                      max_inflight: Optional[int] = None,
                      deadline_ms: Optional[float] = None,
                      trace=None, queue=None, page_bytes: int = 1 << 16,
+                     replicas: Optional[int] = None,
+                     kill_replica_at_round: Optional[tuple] = None,
                      verbose: bool = True) -> dict:
         """The serving gateway (DESIGN.md §14): async continuous batching
         with mid-flight arrivals, admission control and the paged
@@ -989,16 +998,27 @@ class Session:
                 (``"poison-prefill"``).
             queue: a live ``gateway.RequestQueue`` fed from other
                 threads; the gateway drains it until ``close()``.
-            page_bytes: page size of the inference cache pool.
+            page_bytes: page size of the inference cache pool (shared
+                across replicas; each replica owns a named cache on it).
+            replicas: model replica count (defaults to ``plan.replicas``).
+                Each replica gets its own ``slots``-wide decode chain and
+                the router spreads requests across them (DESIGN.md §15);
+                per-request streams are bit-identical to ``replicas=1``.
+            kill_replica_at_round: deterministic replica-death drill -
+                ``(replica_idx, round)`` marks that replica dead at that
+                decode round; survivors absorb its requests.
             verbose: print the summary line.
         Returns:
             dict with per-request ``streams``/``handles``, admission
             counts, ``tokens``/``padded_tokens``/``tokens_per_s``, the
-            traced ``nodes``/``trace`` and ``runtime_stats`` (including
-            the ``serve`` counters and ``request_latency_hist``).
+            traced ``nodes``/``trace``, ``replicas``/
+            ``replica_assignments`` and ``runtime_stats`` (including the
+            ``serve``/``serve_replicas`` counters and
+            ``request_latency_hist``).
         """
         from .gateway import Gateway, RequestQueue
         plan, runtime, cfg = self.plan, self.runtime, self.cfg
+        n_replicas = plan.replicas if replicas is None else int(replicas)
         if cfg.family == "encdec":
             raise ValueError("serve_stream does not support encdec "
                              "architectures (scalar-only decoder position "
@@ -1030,7 +1050,9 @@ class Session:
                      prefill_step=pre1, decode_step=dec, params=params,
                      prompt_len=prompt_len, gen_len=gen_len, slots=slots,
                      max_inflight=max_inflight, deadline_ms=deadline_ms,
-                     page_bytes=page_bytes)
+                     page_bytes=page_bytes, replicas=n_replicas,
+                     kill_replica_at_round=kill_replica_at_round)
+        self._gateway = gw          # drill seam: tests call kill_replica()
         tracer = Trace(runtime)
         remove = runtime.add_trace_hook(tracer.record)
         t0 = time.time()
@@ -1052,7 +1074,9 @@ class Session:
             "runtime_stats": stats_json,
         })
         if verbose:
-            print(f"[gateway] {q.submitted} requests "
+            rep_note = (f" across {n_replicas} replicas"
+                        if n_replicas > 1 else "")
+            print(f"[gateway] {q.submitted} requests{rep_note} "
                   f"({out['completed']} done, {out['cancelled']} "
                   f"cancelled, {out['expired']} expired, "
                   f"{out['failed']} failed, {out['rejected']} rejected), "

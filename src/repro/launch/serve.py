@@ -10,34 +10,72 @@ Two serving loops share this entry point:
   ``RequestQueue``, admission control caps in-flight work
   (``--max-inflight``) and expires laggards (``--deadline-ms``), and
   prefill state parks in the paged inference cache so retire-and-refill
-  loads pages instead of recomputing.
+  loads pages instead of recomputing.  ``--replicas N`` fans the gateway
+  out over N locality-homed model replicas (DESIGN.md §15), and
+  ``--kill-replica-at IDX:ROUND`` runs the replica-death drill.
+
+``--stats-out FILE`` writes the run summary (gateway counters including
+the per-replica split, latency histograms, routing table) as JSON - the
+CI serve drills assert on it.
 
 Examples:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --tiny \
       --requests 16 --slots 4 --prompt-len 32 --gen-len 16
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --tiny \
       --serve-stream --requests 16 --slots 4 --max-inflight 8 \
-      --deadline-ms 5000
+      --deadline-ms 5000 --stats-out serve_stats.json
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --tiny \
+      --serve-stream --localities 2 --replicas 2 --requests 8 --slots 2 \
+      --kill-replica-at 0:2
 """
 from __future__ import annotations
 
 import argparse
+import json
+
 
 from repro.frontend import cli_args, plan_from_args, serve_flags
+
+# result keys that serialize cleanly (handles hold threads and futures)
+_JSON_KEYS = ("requests", "completed", "cancelled", "expired", "failed",
+              "rejected", "tokens", "padded_tokens", "tokens_per_s",
+              "rounds", "epochs", "replicas", "replica_assignments",
+              "streams", "cache", "runtime_stats")
+
+
+def _parse_kill_at(spec):
+    """``IDX:ROUND`` -> ``(idx, round)`` for the replica-death drill."""
+    if spec is None:
+        return None
+    try:
+        idx, round_ = spec.split(":")
+        return (int(idx), int(round_))
+    except ValueError:
+        raise SystemExit(f"--kill-replica-at wants IDX:ROUND, got {spec!r}")
 
 
 def run(args) -> dict:
     plan = plan_from_args(args)
     with plan.compile() as session:
         if getattr(args, "serve_stream", False):
-            return session.serve_stream(
+            out = session.serve_stream(
                 requests=args.requests, prompt_len=args.prompt_len,
                 gen_len=args.gen_len, slots=args.slots,
                 max_inflight=args.max_inflight,
-                deadline_ms=args.deadline_ms)
-        return session.serve(
-            requests=args.requests, prompt_len=args.prompt_len,
-            gen_len=args.gen_len, slots=args.slots)
+                deadline_ms=args.deadline_ms,
+                replicas=getattr(args, "replicas", None),
+                kill_replica_at_round=_parse_kill_at(
+                    getattr(args, "kill_replica_at", None)))
+        else:
+            out = session.serve(
+                requests=args.requests, prompt_len=args.prompt_len,
+                gen_len=args.gen_len, slots=args.slots)
+    if getattr(args, "stats_out", None):
+        payload = {k: out[k] for k in _JSON_KEYS if k in out}
+        with open(args.stats_out, "w") as f:
+            json.dump(payload, f, indent=2, default=str)
+        print(f"[serve] stats -> {args.stats_out}")
+    return out
 
 
 def parser() -> argparse.ArgumentParser:

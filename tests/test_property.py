@@ -631,3 +631,127 @@ def test_steal_protocol_exactly_once_under_seeded_churn(seed):
         assert all(v == int(t[1:]) for t, v in executed.items())
     finally:
         g.shutdown()
+
+
+# -- serve replica routing (DESIGN.md §15) -----------------------------------
+
+@given(seed=st.integers(0, 10 ** 6), replicas=st.integers(1, 4))
+def test_replica_router_event_soup_never_double_assigns_or_strands(
+        seed, replicas):
+    """Seeded soup of assign / re-assign / release / kill / revive events
+    over the gateway's ``ReplicaRouter``: every routed request sits on
+    exactly one live replica, affinity holds while that replica lives
+    (``assign`` is idempotent across retire/refill), ``kill`` hands back
+    exactly its rids, and nothing is ever routed to a dead replica or
+    stranded while any replica is alive."""
+    from repro.frontend.gateway import ReplicaRouter
+
+    rng = np.random.default_rng(seed)
+    router = ReplicaRouter(replicas)
+    routed: dict[str, int] = {}                  # the test's shadow copy
+    next_rid = [0]
+
+    def check():
+        assert router.assignment == routed
+        for rid, r in routed.items():
+            assert r in router.live, f"{rid} routed to dead replica {r}"
+        for r in range(replicas):                # loads are consistent
+            assert router.load(r) == \
+                sum(1 for v in routed.values() if v == r)
+
+    def assign_new():
+        rid = f"r{next_rid[0]}"
+        next_rid[0] += 1
+        r = router.assign(rid)
+        assert r in router.live
+        # least-loaded tie-to-lowest, computed against the shadow copy
+        # *before* this assignment landed
+        loads = {i: sum(1 for v in routed.values() if v == i)
+                 for i in router.live}
+        best = min(loads.values())
+        assert r == min(i for i, n in loads.items() if n == best)
+        routed[rid] = r
+
+    def reassign_existing():
+        if not routed:
+            return
+        rid = rng.choice(sorted(routed))
+        assert router.assign(rid) == routed[rid]     # affinity: stays put
+
+    def release_one():
+        if not routed:
+            return
+        rid = rng.choice(sorted(routed))
+        router.release(rid)
+        del routed[rid]
+
+    def kill_one():
+        victim = int(rng.integers(0, replicas))
+        victims = router.kill(victim)
+        assert sorted(victims) == sorted(
+            rid for rid, r in routed.items() if r == victim)
+        if not router.live:                      # gateway's revive edge
+            router.revive(victim)
+            return
+        for rid in victims:                      # migrate, as run() does
+            routed[rid] = router.assign(rid)
+            assert routed[rid] in router.live
+            assert routed[rid] != victim
+
+    def revive_one():
+        router.revive(int(rng.integers(0, replicas)))
+
+    ops = [assign_new, assign_new, reassign_existing, release_one,
+           kill_one, revive_one]
+    for _ in range(60):
+        ops[int(rng.integers(0, len(ops)))]()
+        check()
+    # drain: while anything is live, nothing is stranded
+    assert router.live
+    for rid in sorted(routed):
+        assert router.assign(rid) in router.live
+
+
+@given(seed=st.integers(0, 10 ** 6), page_bytes=st.sampled_from([32, 256]))
+def test_named_caches_share_pool_but_never_cross_ownership(seed,
+                                                           page_bytes):
+    """Per-replica pool ownership: two named caches over one shared
+    ``PagePool`` tag pages ``R{i}:req:{rid}``, so one replica freeing or
+    reading the other's pages raises ``PageError``; ``transfer`` (the
+    replica-death migration edge) moves the state bit-identically, flips
+    ownership, and leaks nothing."""
+    from repro.core.paging import InferenceCache, PageError, PagePool
+
+    rng = np.random.default_rng(seed)
+    pool = PagePool(page_bytes)
+    r0 = InferenceCache(pool, name="R0")
+    r1 = InferenceCache(pool, name="R1")
+    state = {"kv": rng.standard_normal((int(rng.integers(2, 6)), 4)
+                                       ).astype(np.float32),
+             "pos": np.arange(int(rng.integers(1, 9)), dtype=np.int32)}
+    r0.put("rq", state)
+    pages = [pid for pid, owner in pool.owners().items()
+             if owner == "R0:req:rq"]
+    assert pages and pool.live == len(pages)     # tagged by the owner cache
+
+    # the foreign replica can neither free nor read those pages
+    with np.testing.assert_raises(PageError):
+        pool.free(pages, "R1:req:rq")
+    with np.testing.assert_raises(PageError):
+        pool.read(pages[0], "R1:req:rq")
+    assert r1.get("rq") is None                  # and its cache misses
+
+    # transfer: bit-identical adoption, ownership flipped, no leaks
+    assert r0.transfer("rq", r1)
+    assert "rq" not in r0 and "rq" in r1
+    back = r1.get("rq")
+    np.testing.assert_array_equal(back["kv"], state["kv"])
+    np.testing.assert_array_equal(back["pos"], state["pos"])
+    assert all(owner == "R1:req:rq" for owner in pool.owners().values())
+    assert r0.counters()["cache_transfers_out"] == 1
+    assert r1.counters()["cache_transfers_in"] == 1
+
+    # transferring an absent rid is a recorded miss, not an error
+    assert not r0.transfer("ghost", r1)
+    r1.drop("rq")
+    assert pool.live == 0 and pool.allocs == pool.frees

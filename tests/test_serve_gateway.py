@@ -249,6 +249,219 @@ def test_wave_serve_accounts_padded_slot_compute():
     assert serve["padded_slot_tokens"] == 4
 
 
+# -- multi-replica routing (DESIGN.md §15) -----------------------------------
+
+def test_two_replica_streams_bit_identical_to_single_replica():
+    """The tentpole contract: N-replica streams are bit-identical per
+    request to the 1-replica gateway, with zero cross-replica page
+    traffic and zero prefill recompute in steady state."""
+    base = _baseline_streams(ARRIVALS)
+    out = _stream([{"at_round": r} for r in ARRIVALS], replicas=2)
+    assert out["completed"] == len(ARRIVALS)
+    assert out["replicas"] == 2
+    assert out["streams"] == base
+
+    serve = out["runtime_stats"]["serve"]
+    assert serve.get("cross_replica_page_fetches", 0) == 0
+    assert serve.get("prefill_recompute", 0) == 0
+    assert serve["refills"] == serve["page_hits"] == len(ARRIVALS)
+
+    # the router spread work: both replicas admitted and refilled, and
+    # the per-replica counter split covers the flat totals
+    per = out["runtime_stats"]["serve_replicas"]
+    assert sorted(per) == ["0", "1"]
+    assert all(per[k]["refills"] > 0 for k in per)
+    assert sum(per[k]["refills"] for k in per) == serve["refills"]
+    assigned = out["replica_assignments"]
+    assert sorted(assigned) == [f"r{i}" for i in range(len(ARRIVALS))]
+    assert set(assigned.values()) == {0, 1}
+
+    # page hygiene across both named caches over the shared pool
+    cache = out["cache"]
+    assert cache["cache_transfers_in"] == cache["cache_transfers_out"] == 0
+    assert cache["pages_live"] == 0 and cache["cache_entries"] == 0
+    assert cache["page_allocs"] == cache["page_frees"]
+
+    # namespaced decode chains for both replicas coexist in one graph
+    names = set(out["nodes"])
+    assert "refill:R0:e0" in names and "refill:R1:e0" in names
+    assert not any(n.startswith(("refill:e", "decode:e")) for n in names)
+
+
+def test_replica_trace_builder_matches_live_run():
+    """The static mirror replays the live ReplicaRouter, so the 2-replica
+    tree matches the live run node for node (phylint's gate)."""
+    from repro.analysis import gateway_trace
+
+    out = _stream([{"at_round": r} for r in ARRIVALS], replicas=2)
+    sig = out["trace"]
+    live = {(name, lane, tuple(sig[d][0] for d in deps))
+            for name, lane, deps in sig}
+    g = gateway_trace(_plan(), requests=len(ARRIVALS), gen_len=4, slots=2,
+                      arrivals=list(ARRIVALS), replicas=2)
+    mirror = {(n.name, n.lane, tuple(g.nodes[d].name for d in n.deps))
+              for n in g.nodes}
+    assert live == mirror
+
+
+def test_kill_replica_drill_completes_on_survivor():
+    """Replica-death rebalance: kill replica 0 at round 2; the survivor
+    adopts its pages (a counted cross-replica fetch, never a prefill
+    recompute) and completes every request with bit-identical streams."""
+    base = _baseline_streams(ARRIVALS)
+    with sanitize.enabled():
+        out = _stream([{"at_round": r} for r in ARRIVALS], replicas=2,
+                      kill_replica_at_round=(0, 2))
+        assert sanitize.get().diagnostics() == []
+    assert out["completed"] == len(ARRIVALS)
+    assert out["cancelled"] == out["expired"] == out["failed"] == 0
+    assert out["streams"] == base
+
+    serve = out["runtime_stats"]["serve"]
+    assert serve["replica_deaths"] == 1
+    assert serve["replica_migrations"] >= 1
+    assert serve["cross_replica_page_fetches"] >= 1
+    assert serve.get("prefill_recompute", 0) == 0
+    # everything ends routed to the survivor; no pages leak either side
+    assert set(out["replica_assignments"].values()) == {1}
+    cache = out["cache"]
+    assert cache["cache_transfers_in"] == cache["cache_transfers_out"] \
+        == serve["cross_replica_page_fetches"]
+    assert cache["pages_live"] == 0 and cache["cache_entries"] == 0
+    assert cache["page_allocs"] == cache["page_frees"]
+
+
+def test_kill_last_replica_revives_on_driver():
+    """Killing the only replica must not strand the queue: the gateway
+    revives it (re-homed on the driver) and completes everything."""
+    base = _baseline_streams(ARRIVALS)
+    out = _stream([{"at_round": r} for r in ARRIVALS], replicas=1,
+                  kill_replica_at_round=(0, 2))
+    assert out["completed"] == len(ARRIVALS)
+    assert out["streams"] == base
+    serve = out["runtime_stats"]["serve"]
+    assert serve["replica_deaths"] == 1 and serve["replica_revivals"] == 1
+    assert serve.get("prefill_recompute", 0) == 0
+    assert out["cache"]["pages_live"] == 0
+
+
+# -- gateway bugfix sweep: CV wake, submit/close race ------------------------
+
+def test_idle_gateway_wakes_on_submit_without_polling_latency():
+    """The idle gateway parks on the queue condition variable (no more
+    20 Hz poll): a submission to an idle gateway reaches prefill fast, so
+    the queue_wait p50 lands strictly below the 10 ms bucket where the
+    old 0-50 ms poll jitter used to put it."""
+    with _plan().compile() as session:
+        rng = np.random.default_rng(7)
+        prompts = [rng.integers(0, session.cfg.vocab, 16).astype(np.int32)
+                   for _ in range(6)]
+        q = RequestQueue()
+
+        def feeder():
+            # warm-up: first request compiles prefill/decode while the
+            # clock is NOT running against later arrivals
+            q.submit(prompts[0]).result(timeout=120)
+            for p in prompts[1:]:
+                time.sleep(0.03)        # gateway is idle-parked each time
+                q.submit(p)
+            q.close()
+
+        t = threading.Thread(target=feeder)
+        t.start()
+        out = session.serve_stream(queue=q, **_kwargs(gen_len=2))
+        t.join()
+    assert out["completed"] == len(prompts)
+    hist = out["runtime_stats"]["request_latency_hist"]
+    counts = hist["counts"]["queue_wait"]
+    total = sum(counts)
+    assert total == len(prompts)
+    # p50 bucket index: first bucket where the cumulative count crosses
+    # half the samples.  Buckets 0..2 are <100us, <1ms, <10ms.
+    acc, p50_bucket = 0, len(counts) - 1
+    for i, c in enumerate(counts):
+        acc += c
+        if acc * 2 >= total:
+            p50_bucket = i
+            break
+    assert p50_bucket <= 2, (
+        f"queue_wait p50 in bucket {hist['labels'][p50_bucket]} - the CV "
+        f"wake regressed to polling latency ({counts})")
+
+
+def test_submit_racing_close_is_atomic_at_the_queue():
+    """Hammer submit() from many threads while close() lands: every
+    handle is either queued-before-close (drainable) or deterministically
+    rejected - never enqueued into a closed queue, never stranded."""
+    for trial in range(25):
+        q = RequestQueue()
+        handles: list = []
+        lock = threading.Lock()
+        start = threading.Barrier(5)
+
+        def submitter():
+            start.wait()
+            for _ in range(20):
+                h = q.submit([1, 2, 3])
+                with lock:
+                    handles.append(h)
+
+        threads = [threading.Thread(target=submitter) for _ in range(4)]
+        for t in threads:
+            t.start()
+        start.wait()
+        q.close()
+        for t in threads:
+            t.join()
+        taken = q.take_ready(10**9)
+        assert q.drained()
+        rejected = [h for h in handles if h.status == "rejected"]
+        queued = [h for h in handles if h.status == "queued"]
+        # exhaustive: nothing in any third state, nothing left behind
+        assert len(rejected) + len(queued) == len(handles)
+        assert sorted(h.rid for h in queued) == sorted(h.rid for h in taken)
+        assert q.submitted == len(queued) and q.rejected == len(rejected)
+        for h in rejected:                   # terminal, not stranded
+            assert h.done()
+            with pytest.raises(RequestRejected, match="closed|capacity"):
+                h.result(timeout=1)
+
+
+def test_gateway_resolves_every_handle_when_close_races_submit():
+    """End to end: a feeder hammers submissions while close() races in;
+    the gateway must leave every returned handle terminal (served or
+    rejected), with served + rejected == submitted attempts."""
+    with _plan().compile() as session:
+        rng = np.random.default_rng(13)
+        prompts = [rng.integers(0, session.cfg.vocab, 16).astype(np.int32)
+                   for _ in range(16)]
+        q = RequestQueue()
+        handles: list = []
+
+        def feeder():
+            for i, p in enumerate(prompts):
+                handles.append(q.submit(p))
+                time.sleep(0.01)
+
+        def closer():
+            time.sleep(0.06)             # lands mid-feed: some submits
+            q.close()                    # race the close and must reject
+
+        tf, tc = threading.Thread(target=feeder), \
+            threading.Thread(target=closer)
+        tf.start(), tc.start()
+        out = session.serve_stream(queue=q, **_kwargs(gen_len=2))
+        tf.join(), tc.join()
+    for h in handles:
+        assert h.done(), f"{h.rid} stranded in {h.status!r}"
+        assert h.status in ("done", "rejected")
+    served = sum(1 for h in handles if h.status == "done")
+    rejected = sum(1 for h in handles if h.status == "rejected")
+    assert served + rejected == len(prompts)
+    assert out["completed"] == served and out["rejected"] == rejected
+    assert out["cache"]["pages_live"] == 0
+
+
 # -- multiproc tier: locality parity + kill drill ----------------------------
 
 @pytest.mark.multiproc
@@ -291,4 +504,55 @@ def test_kill_locality_mid_stream_completes_survivors():
     assert out["completed"] == len(prompts)
     assert out["cache"]["pages_live"] == 0
     base = _stream([{"prompt": p} for p in prompts], **kw)
+    assert out["streams"] == base["streams"]
+
+
+@pytest.mark.multiproc
+def test_two_locality_two_replica_streams_match_single_process():
+    """2 replicas homed on 2 localities (replica 0 on the worker,
+    replica 1 on the driver): streams match the 1-process 1-replica run
+    and steady state never crosses replica page boundaries."""
+    trace = [{"at_round": r} for r in ARRIVALS]
+    with _plan(localities=2, replicas=2).compile() as multi:
+        out2 = multi.serve_stream(trace=trace, **_kwargs())
+    assert out2["completed"] == len(ARRIVALS)
+    assert out2["replicas"] == 2
+    assert out2["cache"]["pages_live"] == 0
+    serve = out2["runtime_stats"]["serve"]
+    assert serve.get("cross_replica_page_fetches", 0) == 0
+    assert serve.get("prefill_recompute", 0) == 0
+    assert out2["streams"] == _baseline_streams(ARRIVALS)
+
+
+@pytest.mark.multiproc
+def test_kill_locality_retires_its_replica_and_survivor_absorbs():
+    """SIGKILL the worker locality hosting replica 0 mid-stream: the
+    liveness sweep retires that replica, the driver-homed survivor
+    adopts its pages and every request completes bit-identically."""
+    with _plan(localities=2, replicas=2).compile() as session:
+        rng = np.random.default_rng(31)
+        prompts = [rng.integers(0, session.cfg.vocab, 16).astype(np.int32)
+                   for _ in range(6)]
+        q = RequestQueue()
+        killed = {}
+
+        def feeder():
+            for i, p in enumerate(prompts):
+                if i == 3:
+                    killed["rank"] = session.kill_locality()
+                q.submit(p)
+                time.sleep(0.05)
+            q.close()
+
+        t = threading.Thread(target=feeder)
+        t.start()
+        out = session.serve_stream(queue=q, **_kwargs())
+        t.join()
+    assert killed["rank"] is not None
+    assert out["completed"] == len(prompts)
+    serve = out["runtime_stats"]["serve"]
+    assert serve["replica_deaths"] == 1
+    assert serve.get("prefill_recompute", 0) == 0
+    assert out["cache"]["pages_live"] == 0
+    base = _stream([{"prompt": p} for p in prompts])
     assert out["streams"] == base["streams"]

@@ -29,7 +29,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 #: ``plan_traces`` output so no tree is linted twice across variants.
 VARIANTS = {
     "standard": {"plan": dict(), "workloads": ("train", "step-contract")},
-    "serve": {"plan": dict(), "workloads": ("serve", "gateway")},
+    "serve": {"plan": dict(),
+              "workloads": ("serve", "gateway", "gateway-replicas")},
     "ddp": {"plan": dict(ddp=True, localities=2), "workloads": None},
     "spmd": {"plan": dict(spmd=True, localities=2), "workloads": None},
 }
